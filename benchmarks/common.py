@@ -1,0 +1,103 @@
+"""Shared benchmark utilities: engine scenario runner + CSV emission.
+
+All benchmarks execute REAL engine schedules (real rollbacks, real token
+divergence) on reduced models on CPU, then replay the event log through the
+TPU-v5e cost model at the full model's scale (serving/costmodel.py).  Two
+numbers are therefore reported per scenario: measured CPU wall time (noisy,
+interpretive) and simulated v5e time (the paper-comparable figure).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro import configs as config_registry
+from repro.core.determinism import FAST_PATH_POLICY, Mode, ReductionPolicy
+from repro.models import init_params
+from repro.serving import costmodel
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams
+
+#: benchmark model: the paper evaluates Llama-3.1-8B; we schedule on its
+#: reduced variant and cost on the full config.
+BENCH_ARCH = "llama3-8b"
+
+#: aggressive fast-path policy so divergence is observable at toy scale
+BENCH_POLICY = ReductionPolicy(
+    thresholds=((2, 16), (4, 8), (16, 4)), combine_dtype="bfloat16"
+)
+
+_PARAM_CACHE: Dict[str, tuple] = {}
+
+
+def bench_model(arch: str = BENCH_ARCH):
+    if arch not in _PARAM_CACHE:
+        cfg = config_registry.get_smoke_config(arch)
+        params = init_params(cfg, jax.random.key(0))
+        _PARAM_CACHE[arch] = (cfg, params)
+    return _PARAM_CACHE[arch]
+
+
+def full_config(arch: str = BENCH_ARCH):
+    return config_registry.get_config(arch)
+
+
+def make_requests(
+    cfg, n: int, det_ratio: float, max_new: int, in_len: int = 12,
+    seed: int = 0, out_lens: Optional[Sequence[int]] = None,
+) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    det_flags = rng.random(n) < det_ratio
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, cfg.vocab_size, in_len).tolist()
+        ol = out_lens[i] if out_lens is not None else max_new
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            sampling=SamplingParams(
+                max_new_tokens=int(ol), is_deterministic=bool(det_flags[i]),
+                seed=1000 + i,
+            ),
+        ))
+    return reqs
+
+
+def run_scenario(
+    cfg, params, requests: List[Request], *, mode: Mode = Mode.LLM42,
+    window: int = 8, group: int = 4, max_batch: int = 8, capacity: int = 256,
+    policy: ReductionPolicy = BENCH_POLICY,
+) -> Dict:
+    eng = Engine(cfg, params, mode=mode, policy=policy, window=window,
+                 group=group, max_batch=max_batch, capacity=capacity)
+    for r in requests:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    wall = time.time() - t0
+    out_tokens = sum(r.num_output for r in done)
+    return {
+        "engine": eng,
+        "done": done,
+        "events": eng.events,
+        "wall_s": wall,
+        "out_tokens": out_tokens,
+        "rollbacks": sum(r.num_rollbacks for r in done),
+        "recomputed": sum(r.num_recomputed_tokens for r in done),
+    }
+
+
+def simulated_throughput(full_cfg, result: Dict, *, invariant=False) -> float:
+    return costmodel.throughput_tokens_per_s(
+        full_cfg, result["events"], result["out_tokens"],
+        invariant_mode=invariant,
+    )
+
+
+def emit(rows: List[Tuple], header: str) -> None:
+    print(header)
+    for row in rows:
+        print(",".join(str(x) for x in row))

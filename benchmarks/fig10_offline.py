@@ -1,0 +1,47 @@
+"""Paper Fig. 10 + Table 4 — offline throughput & rollback statistics
+across deterministic-traffic ratios.
+
+For each det ratio in {0%, 10%, 50%, 100%}:
+  * LLM42 simulated v5e throughput
+  * SGLang-Deterministic (batch-invariant, global) and
+    SGLang-Non-Deterministic reference points
+  * rollback count + recomputed-token fraction (Table 4)
+"""
+
+from __future__ import annotations
+
+from repro.core.determinism import Mode
+from benchmarks.common import (
+    bench_model, full_config, make_requests, run_scenario,
+    simulated_throughput,
+)
+
+
+def run(n_requests: int = 12, max_new: int = 32):
+    cfg, params = bench_model()
+    fcfg = full_config()
+    rows = []
+
+    nd = run_scenario(cfg, params, make_requests(cfg, n_requests, 0.0, max_new),
+                      mode=Mode.NONDET)
+    t_nd = simulated_throughput(fcfg, nd)
+    rows.append(("fig10_sglang_nondet_tok_s", round(nd["wall_s"], 1), round(t_nd, 1)))
+
+    bi = run_scenario(cfg, params, make_requests(cfg, n_requests, 0.0, max_new),
+                      mode=Mode.BATCH_INVARIANT)
+    t_bi = simulated_throughput(fcfg, bi, invariant=True)
+    rows.append(("fig10_sglang_det_tok_s", round(bi["wall_s"], 1), round(t_bi, 1)))
+
+    for ratio in (0.0, 0.1, 0.5, 1.0):
+        reqs = make_requests(cfg, n_requests, ratio, max_new, seed=7)
+        r = run_scenario(cfg, params, reqs, mode=Mode.LLM42, window=8, group=4)
+        t = simulated_throughput(fcfg, r)
+        pct = int(ratio * 100)
+        rows.append((f"fig10_llm42_{pct}pct_tok_s", round(r["wall_s"], 1), round(t, 1)))
+        rows.append((f"table4_rollbacks_{pct}pct", "", r["rollbacks"]))
+        rows.append((f"table4_recompute_frac_{pct}pct", "",
+                     round(r["recomputed"] / max(r["out_tokens"], 1), 4)))
+
+    rows.append(("fig10_llm42_100pct_vs_sglang_det", "",
+                 round(rows[-3][2] / max(t_bi, 1e-9), 3)))
+    return rows

@@ -1,0 +1,60 @@
+"""Paper Fig. 11 + Table 5 — online inference: end-to-end latency and TTFT
+CDFs under Poisson load, across modes and deterministic-traffic ratios.
+
+The engine runs for real (reduced model, real rollbacks); the clock is the
+v5e cost model (discrete-event simulation, serving/online.py).  Load is
+scaled to the simulated throughput of the reduced-cost Llama-8B (the paper
+drives 4xH100 at 12–18 QPS; our single-chip sim saturates lower).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.determinism import Mode
+from repro.serving.online import percentile, run_online
+from repro.serving.engine import Engine
+from benchmarks.common import (
+    BENCH_POLICY, bench_model, full_config, make_requests,
+)
+from repro.training.data import poisson_arrivals
+
+
+def _run(cfg, params, fcfg, n, qps, det_ratio, mode, seed=0):
+    engine = Engine(cfg, params, mode=mode, policy=BENCH_POLICY,
+                    window=8, group=4, max_batch=8, capacity=256)
+    reqs = make_requests(cfg, n, det_ratio, max_new=24, seed=seed)
+    arrivals = poisson_arrivals(n, qps, seed=seed)
+    res = run_online(engine, fcfg, list(zip(reqs, arrivals)),
+                     invariant_mode=(mode == Mode.BATCH_INVARIANT))
+    lat = list(res.latencies.values())
+    tt = list(res.ttfts.values())
+    return {
+        "p50": percentile(lat, 50), "p99": percentile(lat, 99),
+        "ttft_p50": percentile(tt, 50), "ttft_p90": percentile(tt, 90),
+    }
+
+
+def run(n: int = 24, qps: float = 40.0):
+    cfg, params = bench_model()
+    fcfg = full_config()
+    rows = []
+
+    nd = _run(cfg, params, fcfg, n, qps, 0.0, Mode.NONDET)
+    rows.append((f"fig11_nondet_p50_ms", "", round(nd["p50"] * 1e3, 1)))
+    rows.append((f"fig11_nondet_p99_ms", "", round(nd["p99"] * 1e3, 1)))
+    rows.append((f"table5_nondet_ttft_p50_ms", "", round(nd["ttft_p50"] * 1e3, 2)))
+
+    bi = _run(cfg, params, fcfg, n, qps, 0.0, Mode.BATCH_INVARIANT)
+    rows.append((f"fig11_batchinv_p50_ms", "", round(bi["p50"] * 1e3, 1)))
+    rows.append((f"fig11_batchinv_p99_ms", "", round(bi["p99"] * 1e3, 1)))
+    rows.append((f"table5_batchinv_ttft_p50_ms", "", round(bi["ttft_p50"] * 1e3, 2)))
+
+    for ratio in (0.02, 0.1, 0.5, 1.0):
+        r = _run(cfg, params, fcfg, n, qps, ratio, Mode.LLM42)
+        pct = int(ratio * 100)
+        rows.append((f"fig11_llm42_{pct}pct_p50_ms", "", round(r["p50"] * 1e3, 1)))
+        rows.append((f"fig11_llm42_{pct}pct_p99_ms", "", round(r["p99"] * 1e3, 1)))
+        rows.append((f"table5_llm42_{pct}pct_ttft_p50_ms", "",
+                     round(r["ttft_p50"] * 1e3, 2)))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 12 — grouped verification ablation.
+
+Grid over (per-request window W x verify-group size G), 100% deterministic
+traffic: simulated v5e total completion time (offline analogue of their P99
+latency) and recomputation overhead.  The paper's finding: grouped small
+windows dominate single-request large windows (e.g. 8x32 beats 1x256).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    bench_model, full_config, make_requests, run_scenario,
+    simulated_throughput,
+)
+from repro.serving import costmodel
+
+
+def run(n_requests: int = 8, max_new: int = 48):
+    cfg, params = bench_model()
+    fcfg = full_config()
+    rows = []
+    for w in (4, 8, 16):
+        for g in (1, 4, 8):
+            reqs = make_requests(cfg, n_requests, 1.0, max_new, seed=3)
+            r = run_scenario(cfg, params, reqs, window=w, group=g)
+            sim = costmodel.simulate(fcfg, r["events"])
+            rows.append((
+                f"fig12_W{w}_G{g}_sim_ms",
+                round(r["wall_s"], 1),
+                round(sim["total_s"] * 1e3, 2),
+            ))
+            rows.append((
+                f"fig12_W{w}_G{g}_recompute_frac", "",
+                round(r["recomputed"] / max(r["out_tokens"], 1), 4),
+            ))
+    return rows

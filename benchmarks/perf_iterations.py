@@ -1,0 +1,204 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbs (deliverable (g) iteration log) — run standalone:
+
+  PYTHONPATH=src python benchmarks/perf_iterations.py
+
+Three pairs, per the assignment's selection rule:
+
+  P1  command-r-35b × decode_32k   — most representative of the paper's
+      technique (serving decode is where DVR lives) AND worst useful-flops
+      ratio in the baseline table (~0.1: per-device FLOPs ~10× the model
+      ideal, caused by GSPMD "involuntary full rematerialization" around
+      the attention einsum when the KV cache is sharded on head_dim).
+  P2  seamless-m4t-medium × train_4k — most collective-bound baseline
+      (collective term > memory > 30× compute): FSDP all-gathers of a 1B-
+      param model dominate; FSDP buys nothing at this scale.
+  P3  kimi-k2-1t-a32b × decode_32k  — the paper-table trillion-param MoE;
+      worst absolute decode step time, same replication pathology plus
+      expert-weight streaming.
+
+Each iteration records hypothesis → change → before/after terms → verdict.
+The paper-faithful BASELINE rows are kept separately from the optimized
+variants (assignment: both must stay visible).
+"""
+
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+import roofline as R  # noqa: E402
+
+
+PAIRS = [
+    {
+        "id": "P1",
+        "arch": "command_r_35b",
+        "shape": "decode_32k",
+        "why": "paper-technique-representative + worst useful ratio",
+        "iterations": [
+            {
+                "name": "kv-seq-sharding",
+                "variant": {"kv_policy": "seq_first"},
+                "hypothesis": (
+                    "Baseline shards KV head_dim over model=16 (kv_heads=8 "
+                    "not divisible); GSPMD cannot propagate that layout "
+                    "through the attention einsum and falls back to "
+                    "involuntary full rematerialization — replicating the "
+                    "(B,32k,8,128) cache per device per layer.  Napkin: "
+                    "replication costs ~cache_bytes×model ≈ 16× extra "
+                    "traffic and compute; seq-first sharding (FlashDecoding "
+                    "sequence parallelism) makes the contraction batch over "
+                    "the sharded axis, needing only O(B·H·D) LSE-combine "
+                    "collectives.  Expect memory term to drop ≥5×, compute "
+                    "term toward the 2ND ideal (useful → ~1)."
+                ),
+            },
+        ],
+    },
+    {
+        "id": "P2",
+        "arch": "seamless_m4t_medium",
+        "shape": "train_4k",
+        "why": "most collective-bound baseline",
+        "iterations": [
+            {
+                "name": "drop-fsdp",
+                "variant": {"fsdp": False},
+                "hypothesis": (
+                    "FSDP all-gathers every weight once per microbatch "
+                    "(16 microbatches × ~1B params × 2B ≈ 32 GB/step of "
+                    "all-gather per device-column) while the model needs "
+                    "only ~2.6 GB/device replicated — at 1B params FSDP "
+                    "buys nothing (fits easily) and costs the dominant "
+                    "term.  Expect collective term to drop to the gradient "
+                    "all-reduce floor (~2×params×4B/step) — roughly "
+                    "16×num_mb → 2, i.e. ≥5× down; memory/compute ~flat."
+                ),
+            },
+        ],
+    },
+    {
+        "id": "P2b",
+        "arch": "seamless_m4t_medium",
+        "shape": "train_4k",
+        "why": "alternative branch: keep FSDP, quarter the all-gather count",
+        "iterations": [
+            {
+                "name": "mb-rows-64",
+                "variant": {"fsdp": True, "mb_rows": 64},
+                "hypothesis": (
+                    "FSDP all-gathers run once per microbatch; at 1B params "
+                    "the activations of a 64-row microbatch (64x4096x1024x2B "
+                    "x 24 layers ~ 13 GB global, 0.8 GB/device after remat) "
+                    "still fit, so quartering the microbatch count (16 -> 4) "
+                    "should cut all-gather traffic ~4x while keeping the "
+                    "FSDP memory benefit (unlike P2's drop-fsdp).  Expect "
+                    "collective term ~4x down vs the FSDP baseline; compute "
+                    "and memory ~flat."
+                ),
+            },
+        ],
+    },
+    {
+        "id": "P3",
+        "arch": "kimi_k2_1t_a32b",
+        "shape": "decode_32k",
+        "why": "paper-table MoE giant; worst absolute decode step",
+        "iterations": [
+            {
+                "name": "kv-seq-sharding",
+                "variant": {"kv_policy": "seq_first"},
+                "hypothesis": (
+                    "Same replication pathology as P1 (kv=8 < model=16 ⇒ "
+                    "head_dim sharding ⇒ involuntary remat), on a 61-layer "
+                    "cache.  Baseline per-device memory term (~3 s) is "
+                    "~300× the 8 GB/device weight-streaming floor (~10 ms), "
+                    "so replication dominates; expect ≥10× memory-term "
+                    "drop.  Expert weights (1T params/256 chips ≈ 8 GB bf16 "
+                    "per device) then become the floor — irreducible "
+                    "without quantization, which we note but do not apply."
+                ),
+            },
+            {
+                "name": "expert-2d-sharding",
+                "variant": {"kv_policy": "seq_first", "moe_ep": "data"},
+                "hypothesis": (
+                    "Baseline serve rules put experts on the model axis "
+                    "only: 384/16 = 24 FULL experts per device = 129 GB — "
+                    "over v5e HBM and 13x the streaming floor.  2-D expert "
+                    "sharding (experts over data=16, per-expert ffn over "
+                    "model=16) cuts resident expert weights to ~8 GB/device "
+                    "at the cost of an all-to-all token dispatch across "
+                    "data.  Napkin: memory term floor 129 GB -> 8 GB "
+                    "streaming => up to 16x down on the weight component; "
+                    "all-to-all adds ~B*top_k*d_model*2B/(16 links) ~ "
+                    "2 MB/device — negligible.  Expect memory term >=3x "
+                    "down and per-device HBM residency to become feasible."
+                ),
+            },
+        ],
+    },
+]
+
+
+def run_pair(pair, mesh, dryrun_dir):
+    arch, shape = pair["arch"], pair["shape"]
+    print(f"\n=== {pair['id']} {arch} × {shape} ({pair['why']}) ===", flush=True)
+    baseline = R.analyze(arch, shape, mesh, dryrun_dir, variant=None)
+    rec = {"pair": pair["id"], "arch": arch, "shape": shape,
+           "why": pair["why"], "baseline": baseline, "iterations": []}
+    print(f"  baseline: compute={baseline['compute_s']*1e3:.3f}ms "
+          f"memory={baseline['memory_s']*1e3:.3f}ms "
+          f"coll={baseline['collective_s']*1e3:.3f}ms "
+          f"dom={baseline['dominant']} useful={baseline['useful_ratio']:.3f}",
+          flush=True)
+    prev = baseline
+    for it in pair["iterations"]:
+        result = R.analyze(arch, shape, mesh, dryrun_dir, variant=it["variant"])
+        dom = prev["dominant"] + "_s"
+        before, after = prev[dom], result[dom]
+        delta = (before - after) / max(before, 1e-12)
+        verdict = "CONFIRMED" if delta > 0.05 else (
+            "REFUTED" if delta < -0.05 else "NEUTRAL")
+        entry = {
+            "name": it["name"], "variant": it["variant"],
+            "hypothesis": it["hypothesis"],
+            "before": {k: prev[k] for k in
+                       ("compute_s", "memory_s", "collective_s", "dominant",
+                        "useful_ratio", "step_time_s")},
+            "after": {k: result[k] for k in
+                      ("compute_s", "memory_s", "collective_s", "dominant",
+                       "useful_ratio", "step_time_s")},
+            "dominant_term_delta": delta,
+            "step_time_speedup": prev["step_time_s"] / max(result["step_time_s"], 1e-12),
+            "verdict": verdict,
+        }
+        rec["iterations"].append(entry)
+        print(f"  [{it['name']}] {verdict}: dominant({prev['dominant']}) "
+              f"{before*1e3:.3f}ms -> {after*1e3:.3f}ms "
+              f"({delta*100:+.1f}%), step {entry['step_time_speedup']:.2f}x; "
+              f"now compute={result['compute_s']*1e3:.3f} "
+              f"memory={result['memory_s']*1e3:.3f} "
+              f"coll={result['collective_s']*1e3:.3f} "
+              f"useful={result['useful_ratio']:.3f}", flush=True)
+        prev = result
+    return rec
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    out = []
+    for pair in PAIRS:
+        out.append(run_pair(pair, mesh, "experiments/dryrun"))
+    with open("experiments/perf_iterations.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print("\nwrote experiments/perf_iterations.json")
+
+
+if __name__ == "__main__":
+    main()

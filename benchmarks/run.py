@@ -1,0 +1,53 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is measured
+CPU wall time (reduced models, interpretive — trends only); ``derived`` is
+the paper-comparable quantity (simulated TPU-v5e throughput/latency from
+the roofline cost model, span lengths, rollback counts, ...).
+
+The roofline analysis (deliverable (g)) runs as a separate process because
+it needs the 512-device XLA host-platform simulation:
+    PYTHONPATH=src python benchmarks/roofline.py
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig4_kernels,
+        fig5_selective,
+        fig6_spans,
+        fig9_window,
+        fig10_offline,
+        fig11_online,
+        fig12_grouped,
+    )
+
+    suites = [
+        ("fig4", fig4_kernels.run),
+        ("fig5", fig5_selective.run),
+        ("fig6", fig6_spans.run),
+        ("fig9", fig9_window.run),
+        ("fig10+table4", fig10_offline.run),
+        ("fig11+table5", fig11_online.run),
+        ("fig12", fig12_grouped.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+            for row in rows:
+                print(",".join(str(x) for x in row), flush=True)
+            print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+        except Exception as e:
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

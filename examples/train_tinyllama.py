@@ -1,0 +1,21 @@
+"""End-to-end training driver: a ~25M-param TinyLlama-family model for a
+few hundred steps on the synthetic pipeline, with checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_tinyllama.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train_launch import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args, _ = ap.parse_known_args()
+    sys.argv = [
+        "train", "--arch", "tinyllama-1.1b", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128", "--lr", "1e-3",
+        "--microbatches", "2", "--ckpt", "/tmp/repro_tinyllama.npz",
+        "--log-every", "20",
+    ]
+    train_main()

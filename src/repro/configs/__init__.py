@@ -1,0 +1,68 @@
+"""Assigned architecture configs (+ the paper's own Llama-3.1-8B).
+
+Each module exposes ``config()`` (the exact assigned architecture) and
+``smoke_config()`` (a reduced same-family variant: <=2-4 layers,
+d_model<=512, <=4 experts) for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.base import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "llava_next_mistral_7b",
+    "kimi_k2_1t_a32b",
+    "tinyllama_1_1b",
+    "seamless_m4t_medium",
+    "internlm2_20b",
+    "command_r_35b",
+    "llama4_scout_17b_a16e",
+    "jamba_1_5_large_398b",
+    "rwkv6_3b",
+    "phi3_mini_3_8b",
+]
+
+#: canonical dashed ids (as assigned) -> module names
+DASHED = {i.replace("_", "-"): i for i in ARCH_IDS}
+DASHED["llava-next-mistral-7b"] = "llava_next_mistral_7b"
+DASHED["kimi-k2-1t-a32b"] = "kimi_k2_1t_a32b"
+DASHED["tinyllama-1.1b"] = "tinyllama_1_1b"
+DASHED["seamless-m4t-medium"] = "seamless_m4t_medium"
+DASHED["internlm2-20b"] = "internlm2_20b"
+DASHED["command-r-35b"] = "command_r_35b"
+DASHED["llama4-scout-17b-a16e"] = "llama4_scout_17b_a16e"
+DASHED["jamba-1.5-large-398b"] = "jamba_1_5_large_398b"
+DASHED["rwkv6-3b"] = "rwkv6_3b"
+DASHED["phi3-mini-3.8b"] = "phi3_mini_3_8b"
+
+
+def _module(name: str):
+    key = DASHED.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def get_long_config(name: str) -> ModelConfig:
+    """Sub-quadratic variant for long_500k, or raise if unsupported."""
+    mod = _module(name)
+    if not hasattr(mod, "long_config"):
+        raise ValueError(f"{name} has no sub-quadratic long-context variant")
+    return mod.long_config()
+
+
+def supports_long(name: str) -> bool:
+    return hasattr(_module(name), "long_config")
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,43 @@
+"""phi3-mini-3.8b [dense] — RoPE SwiGLU GQA [arXiv:2404.14219].
+
+kv=32 == num_heads: phi-3-mini is effectively MHA.  long_500k uses the
+sliding-window variant (phi-3 natively uses a 2047-token sliding window in
+the 4k variant; LongRoPE variants extend context — we model long context
+with SW attention, window 4096, per DESIGN.md).
+"""
+import dataclasses
+
+from repro.models.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-mini-3.8b",
+        family="dense",
+        num_layers=32,
+        d_model=3072,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        head_dim=96,
+        rope_theta=10000.0,
+        tie_embeddings=False,
+        max_seq_len=32768 + 128,
+        dtype="bfloat16",
+        source="arXiv:2404.14219 (Phi-3)",
+    )
+
+
+def long_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), name="phi3-mini-3.8b-sw4k", attn_kind="sliding", window=4096,
+        max_seq_len=524288 + 128,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), name="phi3-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=8, head_dim=32, d_ff=512, vocab_size=512, max_seq_len=512, dtype="float32",
+    )

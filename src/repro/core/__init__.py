@@ -1,0 +1,10 @@
+from repro.core.determinism import (  # noqa: F401
+    FAST_PATH_POLICY,
+    INVARIANT_SCHEDULE,
+    Mode,
+    REORDER_ONLY_POLICY,
+    ReductionPolicy,
+    Schedule,
+    VERIFY_SCHEDULE,
+    matmul,
+)

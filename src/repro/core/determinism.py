@@ -1,0 +1,198 @@
+"""Reduction schedules — the root cause of (non-)determinism (paper §2.2, O2/O3).
+
+Non-determinism in LLM inference arises because high-performance kernels pick
+*different reduction schedules for different input shapes* (split-K factor in
+GEMMs, KV-split count in attention), and dynamic batching changes the shape a
+given request's tokens are computed under across runs.  Floating point
+addition is non-associative, so a different reduction tree produces different
+low-order bits, which occasionally flip a sampled token (O1) and then diverge
+catastrophically under autoregressive decoding.
+
+This module makes the reduction schedule an explicit, first-class value:
+
+* ``Schedule`` — (splits, kv_splits, combine_dtype).  Two executions of the
+  same op with the same ``Schedule`` and the same input shape are bitwise
+  identical (shape-consistency, O2).  Executions under different schedules
+  are *both correct* but may differ in low-order bits.
+* ``ReductionPolicy`` — maps batch size -> Schedule, mimicking the shape
+  heuristics of cuBLAS/FlashAttention (split more at small batch to fill the
+  machine).  This is what the *fast path* uses; it is why dynamic batching
+  perturbs results.
+* ``VERIFY_SCHEDULE`` — the fixed schedule used by the verifier
+  (splits=1, kv_splits=1, f32 combine): position-consistent by construction.
+* ``matmul(x, w, schedule)`` — a GEMM whose accumulation tree is determined
+  by ``schedule``.  This routes *every* matrix multiply in the model zoo, so
+  the whole forward pass inherits schedule-dependence exactly as on a GPU.
+
+Determinism modes (paper §4.1 / §5):
+
+* ``NONDET``          — fast path everywhere; no verification.
+* ``BATCH_INVARIANT`` — the He-et-al. baseline: one universal schedule for
+                        every op regardless of batch (deterministic, slow).
+* ``LLM42``           — fast path + decode-verify-rollback for the requests
+                        that ask for determinism (the paper's contribution).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Mode(enum.Enum):
+    NONDET = "nondet"
+    BATCH_INVARIANT = "batch_invariant"
+    LLM42 = "llm42"
+
+
+class Schedule(NamedTuple):
+    """A concrete reduction schedule.
+
+    ``splits``        K-split count for GEMM reductions.
+    ``kv_splits``     sequence-split count for decode attention.
+    ``combine_dtype`` dtype in which split partials are combined.  Real GPU
+                      split-K kernels accumulate partials in f32 but the
+                      combine stage works on values that round-tripped
+                      through the epilogue; we expose the dtype so tests and
+                      experiments can dial the drift magnitude (f32 ==
+                      reorder-only drift, bf16 == epilogue-rounded drift).
+    ``moe_no_drop``   disable MoE capacity dropping.  Required for the
+                      verifier: with dropping, whether a token overflows an
+                      expert bucket depends on the *other* tokens in the
+                      pass, so a dropped token's output would depend on its
+                      co-grouped requests — breaking position-consistency
+                      (O3).  With no dropping, expert GEMMs reduce each row
+                      independently, so MoE is position-invariant and the
+                      verifier's guarantee extends to MoE archs (a
+                      beyond-paper consideration: the paper's Llama-8B has
+                      no MoE).  The fast path keeps dropping — it is
+                      speculative anyway, and DVR catches drop-induced
+                      flips like any other inconsistency.
+    """
+
+    splits: int = 1
+    kv_splits: int = 1
+    combine_dtype: str = "float32"
+    moe_no_drop: bool = False
+
+
+#: The verifier's schedule: no splits, f32 combine.  Any op executed under
+#: this schedule with a fixed input shape is bitwise reproducible (O2), and
+#: because the verifier always pads its input to a fixed window shape, every
+#: verified token position sees this exact schedule on every run (O3).
+VERIFY_SCHEDULE = Schedule(
+    splits=1, kv_splits=1, combine_dtype="float32", moe_no_drop=True
+)
+
+#: The universal schedule used by BATCH_INVARIANT mode for *all* traffic.
+INVARIANT_SCHEDULE = VERIFY_SCHEDULE
+
+
+class ReductionPolicy(NamedTuple):
+    """Maps batch geometry -> Schedule, like a GPU kernel autotuner.
+
+    Real libraries split the reduction dimension more aggressively at small
+    batch to occupy more SMs (split-K) / more of the MXU (TPU grid).  The
+    thresholds are deliberately explicit so experiments can vary them.
+    """
+
+    thresholds: tuple = ((4, 8), (16, 4), (64, 2))  # (batch_upper_bound, splits)
+    default_splits: int = 1
+    combine_dtype: str = "float32"
+
+    def schedule_for(self, batch_size: int) -> Schedule:
+        for bound, splits in self.thresholds:
+            if batch_size < bound:
+                return Schedule(
+                    splits=splits, kv_splits=splits, combine_dtype=self.combine_dtype
+                )
+        return Schedule(
+            splits=self.default_splits,
+            kv_splits=self.default_splits,
+            combine_dtype=self.combine_dtype,
+        )
+
+
+#: Default fast-path policy.  bfloat16 combine mirrors the magnitude of
+#: drift seen on tensor-core split-K epilogues and makes the O1 phenomenon
+#: observable at the reduced scales our CPU tests run at.
+FAST_PATH_POLICY = ReductionPolicy(combine_dtype="bfloat16")
+
+#: A conservative policy whose drift comes from reordering alone (f32
+#: combine).  Flips are much rarer — closer to the paper's production rates.
+REORDER_ONLY_POLICY = ReductionPolicy(combine_dtype="float32")
+
+
+def _split_sizes(k: int, splits: int) -> list:
+    """Partition the K dimension into ``splits`` contiguous chunks.
+
+    Mirrors how split-K kernels divide the reduction dim: near-equal chunks,
+    remainder spread over the leading chunks.  Chunk boundaries are a pure
+    function of (k, splits) so the tree is shape-consistent (O2).
+    """
+    base, rem = divmod(k, splits)
+    return [base + (1 if i < rem else 0) for i in range(splits)]
+
+
+def matmul(x: jax.Array, w: jax.Array, schedule: Schedule) -> jax.Array:
+    """GEMM with an explicit reduction tree: ``x @ w`` under ``schedule``.
+
+    splits == 1: single accumulation pass over K in f32 (the verifier /
+    batch-invariant schedule).
+
+    splits == S: K is partitioned into S contiguous chunks; each chunk is
+    reduced independently in f32 (a thread-block's partial in CUDA split-K;
+    a K-minor grid step in our Pallas kernel), then the partials are combined
+    *sequentially in combine_dtype*.  Different S => different accumulation
+    tree => potentially different low-order bits.  This is the exact
+    mechanism of paper Fig. 3.
+
+    Contraction is over the last dim of ``x`` and first dim of ``w``.
+    Output dtype follows x.dtype.
+    """
+    out_dtype = x.dtype
+    k = x.shape[-1]
+    if schedule.splits <= 1 or schedule.splits > k:
+        acc = jnp.matmul(
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        )
+        return acc.astype(out_dtype)
+
+    combine_dtype = jnp.dtype(schedule.combine_dtype)
+    sizes = _split_sizes(k, schedule.splits)
+    acc = None
+    start = 0
+    for size in sizes:
+        xc = jax.lax.slice_in_dim(x, start, start + size, axis=x.ndim - 1)
+        wc = jax.lax.slice_in_dim(w, start, start + size, axis=0)
+        partial = jnp.matmul(
+            xc.astype(jnp.float32), wc.astype(jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        ).astype(combine_dtype)
+        acc = partial if acc is None else (acc + partial)
+        start += size
+    return acc.astype(out_dtype)
+
+
+def segment_reduce_sum(x: jax.Array, axis: int, schedule: Schedule) -> jax.Array:
+    """Sum-reduction with a schedule-dependent tree (for norms etc.).
+
+    splits==1 reduces in f32 in one pass; otherwise the axis is chunked and
+    partials combine sequentially in combine_dtype.
+    """
+    if schedule.splits <= 1 or schedule.splits > x.shape[axis]:
+        return jnp.sum(x.astype(jnp.float32), axis=axis)
+    combine_dtype = jnp.dtype(schedule.combine_dtype)
+    sizes = _split_sizes(x.shape[axis], schedule.splits)
+    acc = None
+    start = 0
+    for size in sizes:
+        xc = jax.lax.slice_in_dim(x, start, start + size, axis=axis)
+        partial = jnp.sum(xc.astype(jnp.float32), axis=axis).astype(combine_dtype)
+        acc = partial if acc is None else acc + partial
+        start += size
+    return acc.astype(jnp.float32)

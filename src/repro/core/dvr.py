@@ -1,0 +1,76 @@
+"""Decode-verify-rollback bookkeeping (paper §4.2).
+
+Host-side protocol logic for one request; the device-side fixed-shape pass
+lives in ``core.verifier``.  The engine calls:
+
+  * ``append_candidate``   after each fast-path decode of a det request
+  * ``ready_for_verify``   to decide when a window is full
+  * ``apply_verify_result`` to commit / roll back after a verify pass
+
+Commit rule (paper Fig. 8): commit the leading run of matching candidates
+plus the verifier token at the first mismatch (or the trailing verifier
+token on a full match).  Every verify pass commits >= 1 token — guaranteed
+forward progress.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.serving.request import Request, State
+
+
+def candidates_per_window(window: int) -> int:
+    """A window of W inputs verifies W-1 candidates (input 0 is the last
+    committed token) and emits one fresh verifier token."""
+    return window - 1
+
+
+def ready_for_verify(req: Request, window: int) -> bool:
+    if not req.sampling.is_deterministic:
+        return False
+    if req.state == State.FINISHED or not req.candidates:
+        return False
+    return (
+        len(req.candidates) >= candidates_per_window(window)
+        or req.done_decoding()
+    )
+
+
+def build_verify_row(
+    req: Request, window: int, pad_token: int = 0
+) -> Tuple[List[int], List[int], int, int, int]:
+    """Returns (inputs[W], cand[W-1], cand_len, start_pos, out_base)."""
+    W = window
+    cand = req.candidates[: W - 1]
+    cand_len = len(cand)
+    last_committed = req.committed[-1]
+    inputs = [last_committed] + cand
+    inputs = inputs + [pad_token] * (W - len(inputs))
+    cand_padded = cand + [-1] * ((W - 1) - cand_len)
+    # abs position of inputs[0]: prompt (+ any prefix embeds) + committed - 1
+    prefix = getattr(req, "_prefix_len", 0)
+    start_pos = req.prompt_len + prefix + len(req.committed) - 1
+    out_base = len(req.committed)  # output index of v_0
+    return inputs, cand_padded, cand_len, start_pos, out_base
+
+
+def apply_verify_result(req: Request, n_match: int, commit_tok: int) -> None:
+    """Commit matching prefix + the verifier token; roll back the rest."""
+    cand_len = len(req.candidates)
+    n_match = min(n_match, cand_len)
+    accepted = req.candidates[:n_match]
+    rejected = cand_len - n_match
+
+    req.committed.extend(accepted)
+    req.committed.append(int(commit_tok))
+    req.candidates = []
+    req.num_verify_passes += 1
+    if rejected > 0:
+        req.num_rollbacks += 1
+        req.num_recomputed_tokens += rejected
+
+    # clamp to the output budget (the verifier may add one token past it)
+    budget = req.sampling.max_new_tokens
+    if len(req.committed) > budget:
+        req.committed = req.committed[:budget]

@@ -1,0 +1,184 @@
+"""Logical-axis → PartitionSpec rules (MaxText-style, minimal).
+
+``param_specs`` (models/base.py) annotates every tensor dim with a logical
+axis name; this module maps those names onto mesh axes per execution mode:
+
+  * TRAIN — FSDP: weight ``embed`` dims sharded over the data axes
+    (ZeRO-3-style, all-gathered per layer by GSPMD), tensor-parallel
+    ``heads/ffn/vocab`` over ``model``, MoE ``experts`` expert-parallel
+    over the data axes.
+  * SERVE — weights replicated over data (decode batches shard over data),
+    tensor-parallel over ``model``; MoE experts expert-parallel over
+    ``model`` (all-to-all dispatch inside a chip group).
+
+Divisibility fallback: if a dim is not divisible by the mesh-axes product
+(e.g. kv_heads=8 over model=16), axes are dropped right-to-left until it
+divides — every (arch × shape × mesh) combination must lower, so the rules
+degrade to replication rather than erroring (DESIGN.md §5).  A mesh axis is
+never used twice in one PartitionSpec (GSPMD requirement); first dim wins.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.base import ModelConfig, param_specs
+from repro.models.transformer import cache_spec
+
+
+Axes = Tuple[str, ...]
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(mesh.shape)  # works for Mesh and AbstractMesh
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def rules_train(mesh: Mesh, *, fsdp: bool = True) -> Dict[str, Any]:
+    """fsdp=False replicates weights over the data axes (pure DP x TP) —
+    trades memory for the per-layer all-gather traffic (§Perf lever)."""
+    d = _data_axes(mesh)
+    return {
+        "embed": d if fsdp else None,
+        "heads": "model", "kv": "model", "ffn": "model", "vocab": "model",
+        "experts": d, "inner": "model", "state": None, "layers": None,
+    }
+
+
+def rules_serve(mesh: Mesh, *, moe_ep: str = "model") -> Dict[str, Any]:
+    """moe_ep: which mesh axis carries the MoE expert dim at serving time.
+    "model" (baseline): experts sharded 16-way, each expert's weights
+    unsharded -> 1/16 of total expert params per device (129 GB for
+    kimi-k2 — over HBM).  "data": 2-D expert sharding — experts over data,
+    per-expert ffn over model -> 1/256 per device (§Perf P3 lever; the
+    batch's token->expert dispatch becomes an all-to-all over data)."""
+    return {
+        "embed": None,
+        "heads": "model", "kv": "model", "ffn": "model", "vocab": "model",
+        "experts": moe_ep, "inner": "model", "state": None, "layers": None,
+    }
+
+
+def _normalize(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def spec_for(shape: Sequence[int], axes: Axes, rules: Dict[str, Any],
+             mesh: Mesh) -> P:
+    """PartitionSpec for one tensor, with divisibility + reuse fallback."""
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        proposal = [a for a in _normalize(rules.get(ax)) if a not in used]
+        # drop axes right-to-left until the dim divides
+        while proposal:
+            prod = int(np.prod([sizes[a] for a in proposal]))
+            if dim % prod == 0:
+                break
+            proposal = proposal[:-1]
+        if proposal:
+            used.update(proposal)
+            parts.append(tuple(proposal) if len(proposal) > 1 else proposal[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, rules: Dict[str, Any]) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: spec_for(s.shape, s.axes, rules, mesh), param_specs(cfg)
+    )
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict[str, Any]) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), param_pspecs(cfg, mesh, rules)
+    )
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(_data_axes(mesh))
+
+
+_SENTINEL_B, _SENTINEL_C = 1717, 1719
+
+
+def cache_pspec_tree(
+    cfg: ModelConfig, mesh: Mesh, batch: int, capacity: int,
+    *, kv_policy: str = "feature_first",
+) -> Any:
+    """PartitionSpecs for the serving cache pytree.
+
+    Batch dims go over the data axes.  The model-axis placement of KV
+    leaves is the §Perf lever:
+
+    * ``feature_first`` (the paper-faithful baseline we dry-ran): shard the
+      first model-divisible non-batch dim — kv_heads when divisible, else
+      head_dim.  head_dim sharding forces GSPMD resharding (involuntary
+      full rematerialization) around the attention einsum.
+    * ``seq_first``: shard the cache *sequence* dim over model (flash-
+      decoding sequence parallelism): the attention contraction batches
+      over the sharded axis, partial softmax stats combine with small
+      collectives, no replication.  Found in hillclimb #1.
+
+    Recurrent-state leaves shard their d_inner / head dim over model.
+    Batch/seq axes are located via sentinel-sized template shapes.
+    """
+    sizes = _axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    d = _data_axes(mesh)
+    dprod = int(np.prod([sizes[a] for a in d]))
+
+    template = cache_spec(cfg, _SENTINEL_B, _SENTINEL_C)
+    real = cache_spec(cfg, batch, capacity)
+
+    def leaf_spec(t: jax.ShapeDtypeStruct, r: jax.ShapeDtypeStruct) -> P:
+        tshape, rshape = t.shape, r.shape
+        parts: list = [None] * len(rshape)
+        seq_axis = None
+        for i, (td, rd) in enumerate(zip(tshape, rshape)):
+            if td == _SENTINEL_B:  # batch axis
+                if rd % dprod == 0:
+                    parts[i] = tuple(d) if len(d) > 1 else d[0]
+                elif len(d) > 1 and rd % sizes[d[-1]] == 0:
+                    parts[i] = d[-1]
+            elif td == _SENTINEL_C:
+                seq_axis = i
+
+        def try_seq() -> bool:
+            if seq_axis is not None and rshape[seq_axis] % model == 0 \
+                    and parts[seq_axis] is None:
+                parts[seq_axis] = "model"
+                return True
+            return False
+
+        def try_feature() -> bool:
+            cand = [
+                i for i, (td, rd) in enumerate(zip(tshape, rshape))
+                if td not in (_SENTINEL_B, _SENTINEL_C) and parts[i] is None
+                and rd % model == 0 and rd >= model and i >= 1
+            ]
+            if cand:
+                parts[cand[0]] = "model"
+                return True
+            return False
+
+        if kv_policy == "seq_first" and seq_axis is not None:
+            try_seq() or try_feature()
+        else:
+            try_feature() or try_seq()
+        return P(*parts)
+
+    return jax.tree_util.tree_map(leaf_spec, template, real)

@@ -1,0 +1,88 @@
+"""Batch-invariant GEMM Pallas kernel — the He-et-al. baseline (paper §2.3).
+
+One *universal* reduction schedule for every input shape: fixed K-block size
+walked in a fixed order, all accumulation in f32, no split-K, no
+shape-adaptive tiling.  Each output row's reduction tree is therefore
+independent of the batch dimension M — batch-invariant — at the cost of the
+shape-adaptive parallelism a tuned kernel would exploit (the performance gap
+quantified in paper Fig. 4a and our fig4 benchmark).
+
+The fixed f32 K-walk accumulates without intermediate rounding, so for any
+M this matches ``ref.gemm_batch_invariant`` (a single-pass f32 reduction)
+bitwise up to f32 dot associativity of the backend — in interpret mode the
+jnp.dot inside each block is the same single-pass reduction as the oracle's.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+#: The universal schedule's fixed blocks.  NEVER shape-dependent — a
+#: shape-adaptive block size would change the within-block reduction
+#: geometry with batch size, which is exactly the non-invariance being
+#: eliminated.  Inputs are padded up to block multiples instead.
+UNIVERSAL_BK = 512
+UNIVERSAL_BM = 128
+UNIVERSAL_BN = 128
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    s = pl.program_id(2)
+
+    partial = jnp.dot(
+        x_ref[...].astype(F32), w_ref[...].astype(F32),
+        preferred_element_type=F32,
+    )
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(s > 0)
+    def _fold():
+        acc_ref[...] = acc_ref[...] + partial  # pure f32, no rounding
+
+    @pl.when(s == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemm_batch_invariant(
+    x: jax.Array,  # (M, K)
+    w: jax.Array,  # (K, N)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn = UNIVERSAL_BM, UNIVERSAL_BN
+    bk = UNIVERSAL_BK
+    # pad everything to the universal block grid (zero K-padding does not
+    # perturb the f32 accumulation: the extra products are exact zeros)
+    Mp, Np, Kp = (-M) % bm + M, (-N) % bn + N, (-K) % bk + K
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    k_steps = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(Mp // bm, Np // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:M, :N]

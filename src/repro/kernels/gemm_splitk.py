@@ -1,0 +1,89 @@
+"""Split-K GEMM Pallas kernel (TPU target; validated interpret=True on CPU).
+
+TPU adaptation of CUDA split-K (DESIGN.md §2): there are no atomics and the
+grid is walked sequentially per core, so "split-K" here means the K axis is
+the *minor grid dimension* and each K-chunk's f32 partial is folded into a
+VMEM accumulator **rounded through combine_dtype between chunks** — the same
+reduction tree as a CUDA split-K partial-sum epilogue, and bit-identical to
+``ref.gemm_splitk``.
+
+Blocking: (bm x bn) output tile resident in VMEM f32 scratch; each grid step
+streams a (bm x bk) x (bk x bn) pair through the MXU.  bk = K / splits, so
+the *number of partials* — the shape of the reduction tree — is the
+schedule's split count.  MXU alignment: bm, bn multiples of 128 when the
+problem allows (ops.py pads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, splits: int, combine_dtype: str):
+    s = pl.program_id(2)  # K-split index (minor grid dim)
+    cd = jnp.dtype(combine_dtype)
+
+    partial = jnp.dot(
+        x_ref[...].astype(F32), w_ref[...].astype(F32),
+        preferred_element_type=F32,
+    )
+    if splits > 1:
+        # round each partial through the combine dtype (split-K epilogue
+        # semantics); an unsplit GEMM is a single pure-f32 reduction
+        partial = partial.astype(cd).astype(F32)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(s > 0)
+    def _fold():
+        folded = (acc_ref[...] + partial).astype(cd).astype(F32)
+        acc_ref[...] = folded
+
+    @pl.when(s == splits - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("splits", "combine_dtype", "bm", "bn", "interpret")
+)
+def gemm_splitk(
+    x: jax.Array,  # (M, K)
+    w: jax.Array,  # (K, N)
+    *,
+    splits: int = 4,
+    combine_dtype: str = "float32",
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and K % splits == 0, (x.shape, w.shape, splits)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0, "ops.py pads to block multiples"
+    bk = K // splits
+
+    grid = (M // bm, N // bn, splits)
+    return pl.pallas_call(
+        functools.partial(_kernel, splits=splits, combine_dtype=combine_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        interpret=interpret,
+    )(x, w)

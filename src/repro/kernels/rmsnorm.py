@@ -1,0 +1,74 @@
+"""Fused (residual +) RMSNorm Pallas kernel.
+
+Position-invariant by construction (paper Table 2): the feature reduction is
+a single f32 pass whose tree depends only on D, never on the number of rows,
+so the same token produces the same bits at any batch size.  This is the
+fused-CUDA-kernel analogue the paper benchmarks in Fig. 4b; the
+batch-invariant *and* fast implementations coincide for RMSNorm on TPU,
+which is itself a point the paper makes (only schedules must be pinned, not
+kernels rewritten).
+
+Grid: rows/bm; each step holds a (bm x D) tile in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(F32)).astype(
+        o_ref.dtype
+    )
+
+
+def _kernel_residual(x_ref, res_ref, scale_ref, o_ref, *, eps: float, out_dtype):
+    x = (x_ref[...].astype(F32) + res_ref[...].astype(F32)).astype(out_dtype)
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    o_ref[...] = (xf * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(F32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def rmsnorm(
+    x: jax.Array,  # (M, D)
+    scale: jax.Array,  # (D,)
+    residual: jax.Array | None = None,
+    *,
+    eps: float = 1e-5,
+    bm: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    M, D = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0, "ops.py pads rows"
+    grid = (M // bm,)
+    row_spec = pl.BlockSpec((bm, D), lambda i: (i, 0))
+    scale_spec = pl.BlockSpec((D,), lambda i: (0,))
+    if residual is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, eps=eps),
+            grid=grid,
+            in_specs=[row_spec, scale_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
+            interpret=interpret,
+        )(x, scale)
+    return pl.pallas_call(
+        functools.partial(_kernel_residual, eps=eps, out_dtype=x.dtype),
+        grid=grid,
+        in_specs=[row_spec, row_spec, scale_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
+        interpret=interpret,
+    )(x, residual, scale)

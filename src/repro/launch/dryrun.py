@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture × input shape) on the production meshes —
+16x16 = 256 chips single-pod and (2,16,16) = 512 chips multi-pod —
+``jax.jit(fn, in_shardings, out_shardings).lower(*specs).compile()`` must
+succeed.  The compiled artifact's ``memory_analysis()`` / ``cost_analysis()``
+plus collective bytes parsed from the optimized HLO feed §Roofline.
+
+The XLA_FLAGS line above MUST precede any other import that initializes
+jax: device count locks on first backend init.  (It is set here only — the
+rest of the repo sees the real single CPU device.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape decode_32k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+
+from repro import configs as config_registry
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import INPUT_SHAPES, build_case
+
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Builds a name -> output-bytes table from definitions, then for each
+    collective op sums the bytes of its operands (falling back to the op's
+    own output size when an operand is not resolvable).
+    """
+    def_bytes: Dict[str, int] = {}
+    def_re = re.compile(r"^\s*(%?[\w.\-]+)\s*=\s*([^\s]+(?:\([^)]*\))?)\s+(\S+)\(")
+    for line in hlo_text.splitlines():
+        m = def_re.match(line)
+        if m:
+            def_bytes[m.group(1).lstrip("%")] = _type_bytes(m.group(2))
+
+    totals = {op: 0 for op in COLLECTIVE_OPS}
+    op_re = re.compile(
+        r"^\s*(%?[\w.\-]+)\s*=\s*(\S+?)\s+([\w\-]+)(?:\.\d+)?\("
+    )
+    for line in hlo_text.splitlines():
+        m = op_re.match(line)
+        if not m:
+            continue
+        opname = m.group(3)
+        base = None
+        for c in COLLECTIVE_OPS:
+            if opname.startswith(c):
+                base = c
+                break
+        if base is None:
+            continue
+        # operands: %names inside the parens
+        paren = line[line.index("(") + 1:]
+        operands = re.findall(r"%?([\w.\-]+)", paren.split(")")[0])
+        ob = sum(def_bytes.get(o, 0) for o in operands)
+        if ob == 0:
+            ob = _type_bytes(m.group(2))
+        totals[base] += ob
+    totals["total"] = sum(totals.values())
+    return totals
+
+
+def run_case(arch: str, shape: str, multi_pod: bool, out_dir: str | None,
+             save_hlo: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "chips": int(mesh.devices.size),
+    }
+    case = build_case(arch, shape, mesh)
+    if case.skipped:
+        rec["status"] = "skipped"
+        rec["reason"] = case.skipped
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}_{shape}_{mesh_name}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    t0 = time.time()
+    try:
+        with mesh:
+            jitted = jax.jit(
+                case.fn, in_shardings=case.in_shardings,
+                out_shardings=case.out_shardings,
+            )
+            lowered = jitted.lower(*case.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None
+                ),
+            },
+            "cost": {
+                "flops": cost.get("flops"),
+                "bytes_accessed": cost.get("bytes accessed"),
+                "transcendentals": cost.get("transcendentals"),
+            },
+            "collective_bytes": coll,
+            "hlo_bytes": len(hlo),
+        })
+        if save_hlo and out_dir:
+            with open(os.path.join(
+                out_dir, f"{arch}_{shape}_{mesh_name}.hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # a failure here is a sharding bug — report it
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape}_{mesh_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = (
+        config_registry.list_archs()
+        if (args.all or args.arch in (None, "all"))
+        else [args.arch]
+    )
+    shapes = (
+        [k for k, v in INPUT_SHAPES.items() if not v.get("extra")]
+        if (args.all or args.shape in (None, "all"))
+        else [args.shape]
+    )
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_case(arch, shape, mp, args.out, args.save_hlo)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_fail += status == "fail"
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f"compile={rec['compile_s']}s "
+                        f"flops={rec['cost']['flops']:.3g} "
+                        f"coll={rec['collective_bytes']['total']:.3g}B"
+                    )
+                elif status == "fail":
+                    extra = rec["error"][:160]
+                print(f"[{status:7s}] {arch:26s} {shape:12s} "
+                      f"{rec['mesh']:16s} {extra}", flush=True)
+    print(f"\nok={n_ok} skipped={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

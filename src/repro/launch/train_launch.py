@@ -1,0 +1,78 @@
+"""End-to-end training driver (CPU-runnable on smoke configs; the full-scale
+multi-pod path is exercised by launch/dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train_launch --arch tinyllama-1.1b \
+      --steps 200 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as config_registry
+from repro.models import init_params
+from repro.models.multimodal import audio_frames
+from repro.training.checkpoint import restore, save
+from repro.training.data import SyntheticTextStream
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = config_registry.get_smoke_config(args.arch)
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    params = init_params(cfg, jax.random.key(0))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    opt_state = init_opt_state(params)
+    start_step = 0
+    if args.resume:
+        params, opt_state, start_step = restore(args.resume, params, opt_state)
+        print(f"resumed from {args.resume} at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      num_microbatches=args.microbatches))
+    stream = iter(SyntheticTextStream(cfg.vocab_size, args.seq, args.batch))
+
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        b = next(stream)
+        batch = {
+            "tokens": jnp.asarray(b.tokens),
+            "targets": jnp.asarray(b.targets),
+            "loss_mask": jnp.asarray(b.loss_mask),
+        }
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = audio_frames(
+                jax.random.PRNGKey(i), args.batch, cfg.encoder_seq_len,
+                cfg.d_model,
+            )
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (i + 1) % args.log_every == 0 or i == start_step:
+            tps = (i + 1 - start_step) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {i + 1:5d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  lr {float(m['lr']):.2e}  "
+                  f"{tps:.0f} tok/s")
+    if args.ckpt:
+        save(args.ckpt, params, opt_state, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.models.base import (  # noqa: F401
+    ModelConfig,
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_axes,
+    param_specs,
+)
+from repro.models.transformer import (  # noqa: F401
+    build_cross_cache,
+    cache_spec,
+    encode,
+    forward,
+    forward_train,
+    init_cache,
+)

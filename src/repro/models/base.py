@@ -1,0 +1,363 @@
+"""Model zoo foundation: configs, parameter specs, logical sharding axes.
+
+Parameters are plain pytrees (nested dicts of jnp arrays) built from
+``ParamSpec`` trees.  Each spec records the tensor shape *and* its logical
+axis names, so ``specs`` is the single source of truth for both
+initialization and distributed sharding (``repro.distributed.sharding`` maps
+logical axes -> mesh ``PartitionSpec`` per execution mode).
+
+Layer stacks are stored with a leading ``layers`` dimension so forward
+passes can ``jax.lax.scan`` over layers — this keeps compiled HLO compact
+(essential for the 512-device dry-run on large configs like kimi-k2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # attention
+    attn_kind: str = "full"  # full | sliding
+    window: int = 4096  # sliding-window size (used when attn_kind == sliding
+    #                     or in long-context decode for archs that support it)
+    rope_theta: float = 10000.0
+    use_bias: bool = False
+    logit_softcap: float = 0.0
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0  # leading layers use dense FFN (kimi-k2 style)
+    moe_every: int = 1  # MoE FFN on layers where (i % moe_every == moe_offset)
+    moe_offset: int = 0
+    # hybrid (jamba): attention layer every `attn_every` layers, else mamba
+    attn_every: int = 0
+    # mamba
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    # rwkv6
+    rwkv_head_dim: int = 64
+    # encoder-decoder
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0  # frames from the (stubbed) audio frontend
+    # multimodal frontend stub: number of prepended embedding tokens
+    num_prefix_embeds: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    max_seq_len: int = 8192
+    dtype: str = "float32"
+    source: str = ""  # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' | 'mamba' | 'rwkv' for decoder layer i."""
+        if self.family == "ssm":
+            return "rwkv"
+        if self.family == "hybrid" and self.attn_every > 0:
+            return "attn" if (i % self.attn_every == 0) else "mamba"
+        return "attn"
+
+    def ffn_kind(self, i: int) -> str:
+        """'dense' | 'moe' for decoder layer i."""
+        if self.num_experts <= 0 or i < self.first_k_dense:
+            return "dense"
+        if i % self.moe_every != self.moe_offset:
+            return "dense"
+        return "moe"
+
+    def block_period(self) -> int:
+        """Smallest repeating period of (layer_kind, ffn_kind) patterns."""
+        period = 1
+        if self.family == "hybrid" and self.attn_every:
+            period = self.attn_every
+        if self.num_experts > 0 and self.moe_every > 1:
+            import math
+
+            period = period * self.moe_every // math.gcd(period, self.moe_every)
+        return period
+
+    def param_count(self) -> int:
+        """Total parameter count (for roofline MODEL_FLOPS)."""
+        total = 0
+        for _, spec in jax.tree_util.tree_leaves_with_path(param_specs(self)):
+            n = 1
+            for s in spec.shape:
+                n *= s
+            total += n
+        return total
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: only top_k experts count)."""
+        total = 0
+        for path, spec in jax.tree_util.tree_leaves_with_path(param_specs(self)):
+            n = 1
+            for s in spec.shape:
+                n *= s
+            if "experts" in spec.axes and self.num_experts > 0:
+                n = n * self.top_k // self.num_experts
+            total += n
+        return total
+
+
+class ParamSpec:
+    """Shape + logical axes + initializer for one parameter tensor."""
+
+    __slots__ = ("shape", "axes", "init", "scale")
+
+    def __init__(self, shape, axes, init="normal", scale=None):
+        assert len(shape) == len(axes), (shape, axes)
+        self.shape = tuple(int(s) for s in shape)
+        self.axes = tuple(axes)
+        self.init = init
+        self.scale = scale
+
+    def instantiate(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if len(self.shape) >= 2 else max(self.shape[-1], 1)
+        scale = self.scale if self.scale is not None else fan_in**-0.5
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dtype)
+
+    def __repr__(self):
+        return f"ParamSpec({self.shape}, {self.axes})"
+
+
+# ---------------------------------------------------------------------------
+# per-layer-kind parameter specs.  Logical axis vocabulary:
+#   embed   d_model dims of weight matrices (FSDP axis in training)
+#   heads   fused head*head_dim output dims (tensor-parallel)
+#   kv      fused kv_head*head_dim dims (tensor-parallel, small)
+#   ffn     feed-forward hidden (tensor-parallel)
+#   vocab   vocabulary (tensor-parallel)
+#   experts MoE expert dim (expert-parallel)
+#   inner   mamba/rwkv inner dims (tensor-parallel)
+#   state   mamba state / conv dims (replicated)
+#   null    replicated small tensors
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    specs = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, kv * hd), ("embed", "kv")),
+        "wv": ParamSpec((d, kv * hd), ("embed", "kv")),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((h * hd,), ("heads",), init="zeros")
+        specs["bk"] = ParamSpec((kv * hd,), ("kv",), init="zeros")
+        specs["bv"] = ParamSpec((kv * hd,), ("kv",), init="zeros")
+    return specs
+
+
+def cross_attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return attn_specs(cfg)
+
+
+def dense_ffn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "ffn")),
+        "wi_up": ParamSpec((d, f), ("embed", "ffn")),
+        "wo": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def moe_ffn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts"), scale=0.02),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "ffn")),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "ffn")),
+        "wo": ParamSpec((e, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamSpec((dc, di), ("state", "inner"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((di, dt_rank + 2 * ds), ("inner", "state")),
+        "dt_proj_w": ParamSpec((dt_rank, di), ("state", "inner")),
+        "dt_proj_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((di, ds), ("inner", "state"), init="ones"),
+        "D": ParamSpec((di,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def rwkv_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    n_heads = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    return {
+        # time mixing (attention analogue)
+        "mu_r": ParamSpec((d,), ("embed",), scale=0.1),
+        "mu_k": ParamSpec((d,), ("embed",), scale=0.1),
+        "mu_v": ParamSpec((d,), ("embed",), scale=0.1),
+        "mu_w": ParamSpec((d,), ("embed",), scale=0.1),
+        "mu_g": ParamSpec((d,), ("embed",), scale=0.1),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "w_decay": ParamSpec((d,), ("embed",), scale=0.1),  # data-dep decay base
+        "w_lora_a": ParamSpec((d, 64), ("embed", "state"), scale=0.02),
+        "w_lora_b": ParamSpec((64, d), ("state", "embed"), scale=0.02),
+        "u_bonus": ParamSpec((n_heads, hd), ("heads", "state"), scale=0.1),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+        "ln_x_scale": ParamSpec((d,), ("embed",), init="ones"),
+        # channel mixing (FFN analogue)
+        "cm_mu_k": ParamSpec((d,), ("embed",), scale=0.1),
+        "cm_mu_r": ParamSpec((d,), ("embed",), scale=0.1),
+        "cm_wk": ParamSpec((d, cfg.d_ff), ("embed", "ffn")),
+        "cm_wv": ParamSpec((cfg.d_ff, d), ("ffn", "embed")),
+        "cm_wr": ParamSpec((d, d), ("embed", "heads")),
+    }
+
+
+def norm_specs(cfg: ModelConfig, n: int = 2) -> Dict[str, ParamSpec]:
+    return {
+        f"norm{i}": ParamSpec((cfg.d_model,), ("embed",), init="ones")
+        for i in range(n)
+    }
+
+
+def layer_specs(cfg: ModelConfig, i: int, *, decoder: bool = True) -> Dict[str, Any]:
+    """Specs for decoder layer ``i`` (or an encoder layer if decoder=False)."""
+    kind = cfg.layer_kind(i) if decoder else "attn"
+    specs: Dict[str, Any] = {}
+    if kind == "attn":
+        specs["attn"] = attn_specs(cfg)
+    elif kind == "mamba":
+        specs["mamba"] = mamba_specs(cfg)
+    elif kind == "rwkv":
+        specs["rwkv"] = rwkv_specs(cfg)
+    if decoder and cfg.family == "encdec":
+        specs["cross_attn"] = cross_attn_specs(cfg)
+        specs.update(norm_specs(cfg, 3))
+    else:
+        specs.update(norm_specs(cfg, 2))
+    fk = cfg.ffn_kind(i) if decoder else "dense"
+    if kind == "rwkv":
+        pass  # rwkv_specs already includes channel-mix FFN
+    elif fk == "moe":
+        specs["moe"] = moe_ffn_specs(cfg)
+    else:
+        specs["ffn"] = dense_ffn_specs(cfg)
+    return specs
+
+
+def _stack_specs(per_layer: list) -> Dict[str, Any]:
+    """Stack a list of identical spec trees into leading-layer-dim specs."""
+    n = len(per_layer)
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        per_layer[0],
+    )
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """The full parameter spec tree for a model config.
+
+    Decoder layers are grouped into repeating *blocks* of length
+    ``cfg.block_period()``; each block position gets its own stacked spec
+    tree (so heterogeneous hybrids like jamba still scan cleanly).
+    """
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+
+    period = cfg.block_period()
+    assert cfg.num_layers % period == 0 or period == 1, (cfg.name, period)
+    n_blocks = cfg.num_layers // period if cfg.num_layers % period == 0 else cfg.num_layers
+    if cfg.num_layers % period != 0:
+        period = 1
+    # first_k_dense breaks homogeneity: give those layers their own (unstacked)
+    # entries.
+    fkd = cfg.first_k_dense
+    if fkd:
+        specs["head_layers"] = {
+            str(i): layer_specs(cfg, i) for i in range(fkd)
+        }
+        rest = cfg.num_layers - fkd
+        assert rest % period == 0
+        n_blocks = rest // period
+        specs["blocks"] = {
+            str(p): _stack_specs(
+                [layer_specs(cfg, fkd + b * period + p) for b in range(n_blocks)]
+            )
+            for p in range(period)
+        }
+    else:
+        n_blocks = cfg.num_layers // period
+        specs["blocks"] = {
+            str(p): _stack_specs(
+                [layer_specs(cfg, b * period + p) for b in range(n_blocks)]
+            )
+            for p in range(period)
+        }
+
+    if cfg.family == "encdec":
+        specs["enc_blocks"] = {
+            "0": _stack_specs(
+                [layer_specs(cfg, i, decoder=False) for i in range(cfg.num_encoder_layers)]
+            )
+        }
+        specs["enc_final_norm"] = ParamSpec((cfg.d_model,), ("embed",), init="ones")
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(specs)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+    arrs = [spec.instantiate(k, dtype) for spec, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(cfg: ModelConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct param tree (for dry-run lowering, no allocation)."""
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), param_specs(cfg)
+    )
+
+
+def logical_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Pytree (same structure as params) of logical-axis tuples."""
+    return jax.tree_util.tree_map(lambda s: s.axes, param_specs(cfg))

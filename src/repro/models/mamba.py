@@ -1,0 +1,101 @@
+"""Mamba-1 selective state-space layer (for the Jamba hybrid).
+
+State layout (per layer, per request):
+    conv_state: (B, d_conv - 1, d_inner)  — trailing inputs for the causal conv
+    ssm_state:  (B, d_inner, d_state)     — the recurrent SSM state
+
+Unlike attention, a recurrent state cannot be "truncated" for DVR rollback;
+``repro.core.dvr`` instead checkpoints the state at commit points.  To let
+the verifier pick the state at an arbitrary commit index inside the window,
+``mamba_layer(..., collect_states=True)`` emits the state after *every*
+position.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.determinism import Schedule, matmul
+
+F32 = jnp.float32
+
+
+def init_state(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), F32),
+    }
+
+
+def mamba_layer(
+    p: Dict,
+    cfg,
+    x: jax.Array,  # (B, W, D)
+    state: Optional[Dict],
+    schedule: Schedule,
+    collect_states: bool = False,
+) -> Tuple[jax.Array, Optional[Dict], Optional[Dict]]:
+    """Returns (y, new_state, per_pos_states or None)."""
+    B, W, D = x.shape
+    di, ds, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    dt_rank = max(D // 16, 1)
+
+    xz = matmul(x, p["in_proj"], schedule)  # (B, W, 2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time (width dc)
+    if state is not None:
+        ctx = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    else:
+        ctx = jnp.concatenate([jnp.zeros((B, dc - 1, di), xi.dtype), xi], axis=1)
+    windows = jnp.stack(
+        [jax.lax.slice_in_dim(ctx, i, i + W, axis=1) for i in range(dc)], axis=-1
+    )  # (B, W, di, dc)
+    xc = jnp.einsum("bwic,ci->bwi", windows.astype(F32), p["conv_w"].astype(F32))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(F32)).astype(x.dtype)
+    new_conv = jax.lax.slice_in_dim(ctx, ctx.shape[1] - (dc - 1), ctx.shape[1], axis=1)
+
+    proj = matmul(xc, p["x_proj"], schedule)  # (B, W, dt_rank + 2*ds)
+    dt_in = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank : dt_rank + ds].astype(F32)  # (B, W, ds)
+    Cm = proj[..., dt_rank + ds :].astype(F32)
+    dt = jax.nn.softplus(
+        matmul(dt_in, p["dt_proj_w"], schedule).astype(F32) + p["dt_proj_b"].astype(F32)
+    )  # (B, W, di)
+
+    A = -jnp.exp(p["A_log"].astype(F32))  # (di, ds)
+    decay = jnp.exp(dt[..., None] * A[None, None])  # (B, W, di, ds)
+    drive = (dt * xc.astype(F32))[..., None] * Bm[:, :, None, :]  # (B, W, di, ds)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((B, di, ds), F32)
+
+    def step(h, t):
+        d_t, u_t, c_t = t
+        h = d_t * h + u_t  # (B, di, ds)
+        y = jnp.einsum("bis,bs->bi", h, c_t)
+        return h, (y, h if collect_states else 0.0)
+
+    xs = (
+        jnp.moveaxis(decay, 1, 0),
+        jnp.moveaxis(drive, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    hT, (ys, hs) = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, W, di)
+    y = y + xc.astype(F32) * p["D"].astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    out = matmul(y.astype(x.dtype), p["out_proj"], schedule)
+
+    new_state = {"conv": new_conv.astype(xi.dtype), "ssm": hT}
+    per_pos = None
+    if collect_states:
+        # conv state after position w = inputs [w-dc+2 .. w]; slice from ctx
+        conv_per_pos = jnp.stack(
+            [jax.lax.slice_in_dim(ctx, w + 1, w + dc, axis=1) for w in range(W)],
+            axis=1,
+        )  # (B, W, dc-1, di)
+        per_pos = {"conv": conv_per_pos.astype(xi.dtype), "ssm": jnp.moveaxis(hs, 0, 1)}
+    return out, new_state, per_pos

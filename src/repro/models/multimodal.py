@@ -1,0 +1,49 @@
+"""Modality frontend STUBS (the one permitted carve-out per assignment).
+
+[vlm]   llava-next: the ViT/SigLIP vision tower + projector is stubbed;
+        ``vision_embeds`` returns patch embeddings of the right shape.
+        LLaVA-NeXT "anyres" tiling: a 336px base image + up to 4 tiles,
+        each 24x24=576 patches -> 576 * (1 + num_tiles) patch tokens.
+[audio] seamless-m4t: the mel-spectrogram + conv feature extractor
+        (w2v-BERT frontend) is stubbed; ``audio_frames`` returns frame
+        embeddings consumed by the speech encoder.
+
+The *language/decoder transformer* that consumes these embeddings is fully
+implemented (models/transformer.py); only the perception stack is stubbed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+LLAVA_BASE_PATCHES = 576  # 24x24 @ patch 14, 336px
+LLAVA_NUM_TILES = 4  # anyres high-res tiles
+
+
+def num_vision_tokens(num_tiles: int = LLAVA_NUM_TILES) -> int:
+    return LLAVA_BASE_PATCHES * (1 + num_tiles)
+
+
+def vision_embeds(key: jax.Array, batch: int, d_model: int,
+                  num_tiles: int = LLAVA_NUM_TILES, dtype=jnp.float32) -> jax.Array:
+    """Stub for ViT tower + 2-layer MLP projector output."""
+    n = num_vision_tokens(num_tiles)
+    return jax.random.normal(key, (batch, n, d_model), dtype) * 0.02
+
+
+def vision_embeds_spec(batch: int, d_model: int,
+                       num_tiles: int = LLAVA_NUM_TILES, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((batch, num_vision_tokens(num_tiles), d_model),
+                                jnp.dtype(dtype))
+
+
+def audio_frames(key: jax.Array, batch: int, num_frames: int, d_model: int,
+                 dtype=jnp.float32) -> jax.Array:
+    """Stub for mel-spectrogram + conv subsampler output (w2v-BERT frontend)."""
+    return jax.random.normal(key, (batch, num_frames, d_model), dtype) * 0.02
+
+
+def audio_frames_spec(batch: int, num_frames: int, d_model: int, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((batch, num_frames, d_model), jnp.dtype(dtype))

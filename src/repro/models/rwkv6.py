@@ -1,0 +1,106 @@
+"""RWKV-6 "Finch" layer: token-shift time mixing with data-dependent decay,
+plus squared-ReLU channel mixing (arXiv:2404.05892).
+
+Simplifications vs. the reference implementation (documented per DESIGN.md):
+  * static token-shift interpolation weights (mu) for r/k/v/g instead of the
+    full data-dependent ddlerp — the data-*dependent decay* w (the paper's
+    headline feature) is kept, via its LoRA parameterization;
+  * per-head RMS normalization of the wkv output instead of GroupNorm.
+
+State layout (per layer, per request):
+    tm_shift: (B, D)            last input to time mixing
+    cm_shift: (B, D)            last input to channel mixing
+    wkv:      (B, H, hd, hd)    recurrent outer-product state (f32)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.determinism import Schedule, matmul
+
+F32 = jnp.float32
+
+
+def init_state(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    h = cfg.d_model // cfg.rwkv_head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), F32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B, W, D); prev: (B, D) -> shifted (B, W, D) (x at t-1)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(
+    p: Dict,
+    cfg,
+    x: jax.Array,  # (B, W, D), already layer-norm'd
+    prev_shift: jax.Array,  # (B, D)
+    wkv0: jax.Array,  # (B, H, hd, hd)
+    schedule: Schedule,
+    collect_states: bool = False,
+):
+    """Returns (out, new_shift, new_wkv, per_pos_wkv or None)."""
+    B, W, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    xs = _token_shift(x, prev_shift)
+    mix = lambda mu: x + (xs - x) * mu  # noqa: E731
+    r = matmul(mix(p["mu_r"]), p["wr"], schedule).reshape(B, W, H, hd)
+    k = matmul(mix(p["mu_k"]), p["wk"], schedule).reshape(B, W, H, hd)
+    v = matmul(mix(p["mu_v"]), p["wv"], schedule).reshape(B, W, H, hd)
+    g = matmul(mix(p["mu_g"]), p["wg"], schedule)
+
+    # data-dependent decay (the Finch contribution): w = exp(-exp(dd))
+    dd = p["w_decay"].astype(F32) + matmul(
+        jnp.tanh(matmul(mix(p["mu_w"]), p["w_lora_a"], schedule)),
+        p["w_lora_b"], schedule,
+    ).astype(F32)
+    w = jnp.exp(-jnp.exp(dd)).reshape(B, W, H, hd)  # in (0, 1), per channel
+
+    u = p["u_bonus"].astype(F32)  # (H, hd)
+
+    def step(s, t):  # s: (B, H, hd, hd) indexed [k_dim, v_dim]
+        r_t, k_t, v_t, w_t = t
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, hd, hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, (out, s if collect_states else 0.0)
+
+    xs_scan = tuple(jnp.moveaxis(a.astype(F32), 1, 0) for a in (r, k, v, w))
+    sT, (outs, states_pp) = jax.lax.scan(step, wkv0, xs_scan)
+    tm = jnp.moveaxis(outs, 0, 1)  # (B, W, H, hd)
+    rms = jax.lax.rsqrt(jnp.mean(tm**2, axis=-1, keepdims=True) + 1e-6)
+    tm = (tm * rms).reshape(B, W, D) * p["ln_x_scale"]
+    tm = tm * jax.nn.silu(g.astype(F32))
+    out = matmul(tm.astype(x.dtype), p["wo"], schedule)
+
+    per_pos = jnp.moveaxis(states_pp, 0, 1) if collect_states else None
+    return out, x[:, -1], sT, per_pos
+
+
+def channel_mix(
+    p: Dict,
+    cfg,
+    x: jax.Array,  # (B, W, D), already layer-norm'd
+    prev_shift: jax.Array,  # (B, D)
+    schedule: Schedule,
+):
+    """Returns (out, new_shift)."""
+    xs = _token_shift(x, prev_shift)
+    mix = lambda mu: x + (xs - x) * mu  # noqa: E731
+    k = matmul(mix(p["cm_mu_k"]), p["cm_wk"], schedule)
+    k = jnp.square(jax.nn.relu(k.astype(F32))).astype(x.dtype)
+    out = jax.nn.sigmoid(
+        matmul(mix(p["cm_mu_r"]), p["cm_wr"], schedule).astype(F32)
+    ).astype(x.dtype) * matmul(k, p["cm_wv"], schedule)
+    return out, x[:, -1]

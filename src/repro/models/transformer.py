@@ -1,0 +1,421 @@
+"""Unified forward pass for the whole model zoo.
+
+One code path serves all six families (dense / moe / ssm / hybrid / encdec /
+multimodal-backbone).  Decoder layers are grouped into repeating *blocks* of
+``cfg.block_period()`` sub-layers and executed with ``jax.lax.scan`` over the
+block stack, keeping compiled HLO compact enough for the 512-device dry-run
+at kimi-k2 scale.
+
+Three entry points:
+  * ``forward_train``  — full causal, no cache, returns (logits, aux).
+  * ``forward``        — incremental with cache: prefill (W = prompt len),
+                         decode (W = 1) and verification (W = window) all use
+                         this; ``collect_states=True`` additionally returns
+                         per-position recurrent states (for DVR commit-point
+                         state selection on SSM/hybrid archs).
+  * ``encode``         — encoder stack for enc-dec models (seamless-m4t).
+
+Every entry point takes an explicit reduction ``Schedule``; the schedule —
+not the code — decides whether execution is fast-path (batch-dependent) or
+verifier-grade (fixed) numerics.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.determinism import Schedule, VERIFY_SCHEDULE, matmul
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.base import ModelConfig
+from repro.models.layers import (
+    attention_cached,
+    attention_train,
+    cross_attention,
+    encode_cross_kv,
+    moe_ffn,
+    rms_norm,
+    swiglu_ffn,
+)
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+#: extra ring-buffer slots beyond the window so a multi-token pass (prefill
+#: chunk / verify window, <= RING_SLACK tokens) never overwrites keys still
+#: inside a query's window: capacity >= window + pass - 1 is required.
+RING_SLACK = 128
+
+
+def _layer_cache_shape(cfg: ModelConfig, kind: str, batch: int, capacity: int):
+    """(shape, dtype) tree for one layer's cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        cap = (min(capacity, cfg.window + RING_SLACK)
+               if cfg.attn_kind == "sliding" else capacity)
+        kv = (batch, cap, cfg.num_kv_heads, cfg.hd)
+        return {
+            "k": jax.ShapeDtypeStruct(kv, dtype),
+            "v": jax.ShapeDtypeStruct(kv, dtype),
+            "pos": jax.ShapeDtypeStruct((batch, cap), jnp.int32),
+        }
+    if kind == "mamba":
+        return {
+            "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            "ssm": jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.d_state), F32),
+        }
+    if kind == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "tm_shift": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+            "cm_shift": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+            "wkv": jax.ShapeDtypeStruct(
+                (batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), F32
+            ),
+        }
+    raise ValueError(kind)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the full cache (dry-run friendly)."""
+    period = _period(cfg)
+    fkd = cfg.first_k_dense
+    spec: Dict[str, Any] = {}
+    if fkd:
+        spec["head_layers"] = {
+            str(i): _layer_cache_shape(cfg, cfg.layer_kind(i), batch, capacity)
+            for i in range(fkd)
+        }
+    n_blocks = (cfg.num_layers - fkd) // period
+    spec["blocks"] = {}
+    for p in range(period):
+        per_layer = _layer_cache_shape(cfg, cfg.layer_kind(fkd + p), batch, capacity)
+        spec["blocks"][str(p)] = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_blocks,) + s.shape, s.dtype), per_layer
+        )
+    if cfg.family == "encdec":
+        se = cfg.encoder_seq_len
+        kv = (n_blocks, batch, se, cfg.num_kv_heads, cfg.hd)
+        dtype = jnp.dtype(cfg.dtype)
+        spec["cross"] = {
+            "k": jax.ShapeDtypeStruct(kv, dtype),
+            "v": jax.ShapeDtypeStruct(kv, dtype),
+            "mask": jax.ShapeDtypeStruct((batch, se), jnp.bool_),
+        }
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
+    def make(s: jax.ShapeDtypeStruct) -> jax.Array:
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, s.dtype)  # pos slots start empty
+        if s.dtype == jnp.bool_:
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map(make, cache_spec(cfg, batch, capacity))
+
+
+def _period(cfg: ModelConfig) -> int:
+    period = cfg.block_period()
+    if (cfg.num_layers - cfg.first_k_dense) % period != 0:
+        return 1
+    return period
+
+
+# ---------------------------------------------------------------------------
+# single layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    layer_idx: int,
+    lp: Dict,
+    x: jax.Array,
+    lc: Optional[Dict],
+    start_pos: Optional[jax.Array],
+    schedule: Schedule,
+    collect_states: bool,
+    cross_kv: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict], Any, Dict]:
+    """Apply decoder layer `layer_idx`.  Returns (x, new_cache, per_pos, aux)."""
+    kind = cfg.layer_kind(layer_idx)
+    fk = cfg.ffn_kind(layer_idx)
+    window = cfg.window if cfg.attn_kind == "sliding" else 0
+    aux: Dict[str, Any] = {"aux_loss": jnp.float32(0.0), "dropped_frac": jnp.float32(0.0)}
+    per_pos: Any = 0.0
+
+    if kind == "rwkv":
+        st = lc if lc is not None else rwkv_mod.init_state(cfg, x.shape[0], x.dtype)
+        h_tm = rms_norm(x, lp["norm0"], cfg.norm_eps, schedule)
+        tm_out, tm_shift, wkv, pp_wkv = rwkv_mod.time_mix(
+            lp["rwkv"], cfg, h_tm, st["tm_shift"], st["wkv"], schedule, collect_states
+        )
+        x = x + tm_out
+        h_cm = rms_norm(x, lp["norm1"], cfg.norm_eps, schedule)
+        cm_out, cm_shift = rwkv_mod.channel_mix(
+            lp["rwkv"], cfg, h_cm, st["cm_shift"], schedule
+        )
+        x = x + cm_out
+        new_state = {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+        if collect_states:
+            per_pos = {"tm_shift": h_tm, "cm_shift": h_cm, "wkv": pp_wkv}
+        return x, new_state, per_pos, aux
+
+    # attention or mamba sub-layer
+    h = rms_norm(x, lp["norm0"], cfg.norm_eps, schedule)
+    new_cache = lc
+    if kind == "attn":
+        if lc is None:
+            out = attention_train(lp["attn"], cfg, h, schedule, window)
+        else:
+            out, new_cache = attention_cached(
+                lp["attn"], cfg, h, lc, start_pos, schedule, window
+            )
+    else:  # mamba
+        out, new_cache, per_pos = mamba_mod.mamba_layer(
+            lp["mamba"], cfg, h, lc, schedule, collect_states
+        )
+        if per_pos is None:
+            per_pos = 0.0
+    x = x + out
+
+    norm_idx = 1
+    if cfg.family == "encdec" and cross_kv is not None:
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps, schedule)
+        x = x + cross_attention(
+            lp["cross_attn"], cfg, h, cross_kv["k"], cross_kv["v"],
+            cross_kv["mask"], schedule,
+        )
+        norm_idx = 2
+
+    h = rms_norm(x, lp[f"norm{norm_idx}"], cfg.norm_eps, schedule)
+    if fk == "moe":
+        out, moe_aux = moe_ffn(lp["moe"], cfg, h, schedule)
+        aux = {k: moe_aux[k] for k in ("aux_loss", "dropped_frac")}
+    else:
+        out = swiglu_ffn(lp["ffn"], h, schedule)
+    x = x + out
+    return x, new_cache, per_pos, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens, inputs_embeds):
+    if inputs_embeds is not None:
+        return inputs_embeds
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _unembed(params, cfg, x, schedule):
+    if cfg.tie_embeddings:
+        return matmul(x, params["embed"].T, schedule)
+    return matmul(x, params["unembed"], schedule)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,  # (B, W) int32
+    *,
+    inputs_embeds: Optional[jax.Array] = None,  # (B, W, D) overrides tokens
+    cache: Dict,
+    start_pos: jax.Array,  # (B,) absolute position of tokens[:, 0]
+    schedule: Schedule = VERIFY_SCHEDULE,
+    collect_states: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict, Any]:
+    """Incremental forward: prefill / decode / verify.
+
+    Returns (logits (B, W, V) f32, new_cache, per_pos_states).
+    ``per_pos_states`` mirrors the recurrent-layer caches with an extra
+    per-position axis (only when collect_states=True; else None).
+    """
+    x = _embed(params, cfg, tokens, inputs_embeds)
+    period = _period(cfg)
+    fkd = cfg.first_k_dense
+
+    new_cache: Dict[str, Any] = {}
+    per_pos_head: Dict[str, Any] = {}
+    if fkd:
+        new_cache["head_layers"] = {}
+        for i in range(fkd):
+            x, nc, pp, _ = _apply_layer(
+                cfg, i, params["head_layers"][str(i)], x,
+                cache["head_layers"][str(i)], start_pos, schedule, collect_states,
+            )
+            new_cache["head_layers"][str(i)] = nc
+            per_pos_head[str(i)] = pp
+
+    cross = cache.get("cross") if cfg.family == "encdec" else None
+
+    def block_body(carry, xs):
+        h = carry
+        if cfg.family == "encdec":
+            block_params, block_cache, cross_kv = xs
+            cross_kv = {**cross_kv, "mask": cross["mask"]}
+        else:
+            block_params, block_cache = xs
+            cross_kv = None
+        new_caches, pps = {}, {}
+        for p in range(period):
+            h, nc, pp, _aux = _apply_layer(
+                cfg, fkd + p, block_params[str(p)], h, block_cache[str(p)],
+                start_pos, schedule, collect_states, cross_kv,
+            )
+            new_caches[str(p)] = nc
+            pps[str(p)] = pp
+        return h, (new_caches, pps)
+
+    if cfg.family == "encdec":
+        xs = (
+            params["blocks"],
+            cache["blocks"],
+            {"k": cross["k"], "v": cross["v"]},
+        )
+    else:
+        xs = (params["blocks"], cache["blocks"])
+    x, (block_caches, block_pps) = jax.lax.scan(block_body, x, xs, unroll=unroll)
+    new_cache["blocks"] = block_caches
+    if cfg.family == "encdec":
+        new_cache["cross"] = cross
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, schedule)
+    logits = _unembed(params, cfg, x, schedule).astype(F32)
+
+    per_pos = None
+    if collect_states:
+        per_pos = {"blocks": block_pps}
+        if fkd:
+            per_pos["head_layers"] = per_pos_head
+    return logits, new_cache, per_pos
+
+
+def forward_train(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S)
+    *,
+    inputs_embeds: Optional[jax.Array] = None,
+    schedule: Schedule = VERIFY_SCHEDULE,
+    enc_embeds: Optional[jax.Array] = None,  # (B, Se, D) for encdec
+    remat: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """Full causal forward for training.  Returns (logits, aux)."""
+    x = _embed(params, cfg, tokens, inputs_embeds)
+    period = _period(cfg)
+    fkd = cfg.first_k_dense
+
+    cross_mask = None
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None
+        enc_out = encode(params, cfg, enc_embeds, schedule, unroll=unroll)
+        cross_mask = jnp.ones(enc_out.shape[:2], jnp.bool_)
+
+    aux_acc = {"aux_loss": jnp.float32(0.0), "dropped_frac": jnp.float32(0.0)}
+    if fkd:
+        for i in range(fkd):
+            x, _, _, aux = _apply_layer(
+                cfg, i, params["head_layers"][str(i)], x, None, None, schedule, False
+            )
+            aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+
+    def block_body(h, block_params):
+        cross_kv = None
+        if cfg.family == "encdec":
+            block_params, cross_raw = block_params
+            cross_kv = {**cross_raw, "mask": cross_mask}
+        aux_sum = {"aux_loss": jnp.float32(0.0), "dropped_frac": jnp.float32(0.0)}
+        for p in range(period):
+            h, _, _, aux = _apply_layer(
+                cfg, fkd + p, block_params[str(p)], h, None, None, schedule,
+                False, cross_kv,
+            )
+            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+        return h, aux_sum
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    if cfg.family == "encdec":
+        assert period == 1, "encdec assumes homogeneous decoder blocks"
+
+        def per_layer(lp):
+            return encode_cross_kv(lp["cross_attn"], cfg, enc_out, schedule)
+
+        k, v = jax.vmap(per_layer)(params["blocks"]["0"])
+        x, auxs = jax.lax.scan(body, x, (params["blocks"], {"k": k, "v": v}), unroll=unroll)
+    else:
+        x, auxs = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
+    aux_acc = {k: aux_acc[k] + jnp.sum(auxs[k]) for k in aux_acc}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, schedule)
+    logits = _unembed(params, cfg, x, schedule).astype(F32)
+    return logits, aux_acc
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec models)
+# ---------------------------------------------------------------------------
+
+
+def encode(
+    params: Dict,
+    cfg: ModelConfig,
+    enc_embeds: jax.Array,  # (B, Se, D) — stubbed frontend output
+    schedule: Schedule = VERIFY_SCHEDULE,
+    unroll: bool = False,
+) -> jax.Array:
+    """Bidirectional encoder stack.  Returns (B, Se, D)."""
+    x = enc_embeds
+
+    from repro.models.layers import _qkv, _softmax_attend, rope
+
+    def body(h, lp):
+        a = rms_norm(h, lp["norm0"], cfg.norm_eps, schedule)
+        B, S, _ = a.shape
+        q, k, v = _qkv(lp["attn"], cfg, a, schedule)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        q = rope(q, pos, cfg.rope_theta) * (cfg.hd**-0.5)
+        k = rope(k, pos, cfg.rope_theta)
+        mask = jnp.ones((B, S, S), jnp.bool_)  # bidirectional
+        out = _softmax_attend(q.astype(F32), k, v, mask, schedule)
+        out = matmul(out.reshape(B, S, -1).astype(h.dtype), lp["attn"]["wo"], schedule)
+        h = h + out
+        a = rms_norm(h, lp["norm1"], cfg.norm_eps, schedule)
+        h = h + swiglu_ffn(lp["ffn"], a, schedule)
+        return h, 0.0
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"]["0"], unroll=unroll)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps, schedule)
+
+
+def build_cross_cache(
+    params: Dict, cfg: ModelConfig, enc_embeds: jax.Array,
+    enc_mask: Optional[jax.Array] = None,
+    schedule: Schedule = VERIFY_SCHEDULE,
+) -> Dict:
+    """Encoder pass + per-decoder-layer cross K/V (serving admission path)."""
+    enc_out = encode(params, cfg, enc_embeds, schedule)
+    period = _period(cfg)
+    assert period == 1, "encdec assumes homogeneous decoder blocks"
+
+    def per_layer(lp):
+        return encode_cross_kv(lp["cross_attn"], cfg, enc_out, schedule)
+
+    k, v = jax.vmap(per_layer)(params["blocks"]["0"])  # (n_blocks, B, Se, KV, HD)
+    if enc_mask is None:
+        enc_mask = jnp.ones(enc_embeds.shape[:2], jnp.bool_)
+    return {"k": k, "v": v, "mask": enc_mask}

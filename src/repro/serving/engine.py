@@ -1,0 +1,443 @@
+"""The LLM-42 serving engine: continuous batching + selective determinism.
+
+Three modes (paper §5 baselines):
+
+  * ``Mode.NONDET``           — SGLang-Non-Deterministic: fast path only;
+                                schedules vary with dynamic batch size.
+  * ``Mode.BATCH_INVARIANT``  — SGLang-Deterministic: one universal schedule
+                                for every op, all traffic pays for it.
+  * ``Mode.LLM42``            — the paper: fast path for everyone +
+                                decode-verify-rollback for requests with
+                                ``is_deterministic=True``.
+
+The engine is intentionally faithful to the paper's prototype scheduling:
+prefill is per-request (deterministic by construction, never co-batched);
+verification "pauses" decoding (their §5.2 limitation (1)); decode batches
+are formed from all running requests each iteration (continuous batching).
+
+Every device step goes through a jitted function cached per *shape class*
+(batch size, prompt bucket, window) — recompilation per shape is exactly
+the shape→schedule coupling (O2) the paper builds on.
+
+An event log records (kind, shape metadata, wall time) per step; the
+benchmark harness replays it through the TPU cost model
+(``serving.costmodel``) to derive paper-comparable throughput numbers.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvr
+from repro.core.determinism import (
+    FAST_PATH_POLICY,
+    INVARIANT_SCHEDULE,
+    Mode,
+    ReductionPolicy,
+    Schedule,
+    VERIFY_SCHEDULE,
+)
+from repro.core.verifier import make_verify_fn
+from repro.models.base import ModelConfig
+from repro.models.transformer import build_cross_cache, forward
+from repro.serving import kv_cache
+from repro.serving.request import Request, State
+from repro.serving.sampler import sample_batch, sample_token
+
+
+def _bucket(n: int) -> int:
+    """Next power-of-two bucket (>= 8) for prompt padding."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Dict,
+        *,
+        mode: Mode = Mode.LLM42,
+        policy: ReductionPolicy = FAST_PATH_POLICY,
+        window: int = 8,  # verification window W (verifies W-1 candidates)
+        group: int = 4,  # requests verified together (grouped verification)
+        max_batch: int = 8,
+        capacity: Optional[int] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.mode = mode
+        self.policy = policy
+        self.window = window
+        self.group = group
+        self.max_batch = max_batch
+        self.capacity = capacity or cfg.max_seq_len
+        self.pool = kv_cache.CachePool(cfg, max_batch, self.capacity)
+        self.axes = self.pool.axes
+        # recurrent/hybrid archs need a commit-point state checkpoint: the
+        # fast path advances SSM states irreversibly, so the verifier replays
+        # from this shadow pool (core/verifier.py docstring; DESIGN.md §4)
+        self.needs_ckpt = cfg.family in ("ssm", "hybrid")
+        self.ckpt = (
+            jax.tree_util.tree_map(jnp.copy, self.pool.data)
+            if self.needs_ckpt else None
+        )
+
+        self.queue: List[Request] = []
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self.events: List[Dict[str, Any]] = []
+        self._fns: Dict[Any, Callable] = {}
+        self._verify_fn = make_verify_fn(cfg, group, window)
+        self._now = 0  # logical iteration counter
+
+    # ------------------------------------------------------------------
+    # jitted step builders (cached per shape class)
+    # ------------------------------------------------------------------
+
+    def _decode_fn(self, B: int, schedule: Schedule) -> Callable:
+        key = ("decode", B, schedule)
+        if key not in self._fns:
+            cfg, axes = self.cfg, self.axes
+
+            @jax.jit
+            def step(params, pool, slots, tokens, pos, seeds, temps, out_pos,
+                     top_ks):
+                cache = kv_cache.gather(pool, axes, slots)
+                logits, new_cache, _ = forward(
+                    params, cfg, tokens[:, None],
+                    cache=cache, start_pos=pos, schedule=schedule,
+                )
+                nxt = sample_batch(logits[:, 0], seeds, out_pos, temps, top_ks)
+                pool2 = kv_cache.scatter(pool, axes, slots, new_cache)
+                return pool2, nxt
+
+            self._fns[key] = step
+        return self._fns[key]
+
+    def _prefill_fn(self, P: int) -> Callable:
+        key = ("prefill", P)
+        if key not in self._fns:
+            cfg, axes = self.cfg, self.axes
+            n_prefix = cfg.num_prefix_embeds
+            schedule = (
+                INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
+                else VERIFY_SCHEDULE
+            )
+
+            @jax.jit
+            def step(params, pool, slot, tokens, plen, seed, temp, top_k,
+                     prefix_embeds):
+                slots = slot[None]
+                cache = kv_cache.gather(pool, axes, slots)
+                if n_prefix:
+                    tok_embeds = jnp.take(params["embed"], tokens, axis=0)
+                    embeds = jnp.concatenate([prefix_embeds, tok_embeds], axis=1)
+                    logits, new_cache, _ = forward(
+                        params, cfg, inputs_embeds=embeds,
+                        cache=cache, start_pos=jnp.zeros(1, jnp.int32),
+                        schedule=schedule,
+                    )
+                    last = plen + n_prefix - 1
+                else:
+                    logits, new_cache, _ = forward(
+                        params, cfg, tokens,
+                        cache=cache, start_pos=jnp.zeros(1, jnp.int32),
+                        schedule=schedule,
+                    )
+                    last = plen - 1
+                tok = sample_token(logits[0, last], seed, jnp.int32(0), temp,
+                                   top_k)
+                pool2 = kv_cache.scatter(pool, axes, slots, new_cache)
+                return pool2, tok
+
+            self._fns[key] = step
+        return self._fns[key]
+
+    def _cross_fn(self, Se: int) -> Callable:
+        key = ("cross", Se)
+        if key not in self._fns:
+            cfg = self.cfg
+
+            @jax.jit
+            def build(params, enc_embeds):
+                return build_cross_cache(params, cfg, enc_embeds)
+
+            self._fns[key] = build
+        return self._fns[key]
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.state = State.QUEUED
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.pool.num_free() > 0 and (
+            len(self.running) < self.max_batch
+        ):
+            req = self.queue.pop(0)
+            req.slot = self.pool.alloc()
+            self._prefill(req)
+            req.state = State.RUNNING
+            self.running.append(req)
+
+    def _prefill(self, req: Request) -> None:
+        cfg = self.cfg
+        req._prefix_len = cfg.num_prefix_embeds
+        if cfg.family == "encdec":
+            assert req.enc_embeds is not None, "encdec request needs enc_embeds"
+            cross = self._cross_fn(req.enc_embeds.shape[1])(self.params, req.enc_embeds)
+            slot = jnp.array([req.slot])
+            cross_axes = {"k": 1, "v": 1, "mask": 0}
+            self.pool.data["cross"] = kv_cache.scatter(
+                self.pool.data["cross"], cross_axes, slot, cross
+            )
+        P = _bucket(req.prompt_len)
+        if cfg.attn_kind == "sliding" and P > cfg.window:
+            # ring-buffer contract: feed the prompt in window-sized chunks
+            self._prefill_sliding(req)
+            return
+        tokens = jnp.array(
+            [req.prompt + [0] * (P - req.prompt_len)], jnp.int32
+        )
+        prefix = req.prefix_embeds
+        if cfg.num_prefix_embeds and prefix is None:
+            prefix = jnp.zeros(
+                (1, cfg.num_prefix_embeds, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        t0 = time.perf_counter()
+        self.pool.data, tok = self._prefill_fn(P)(
+            self.params, self.pool.data, jnp.int32(req.slot), tokens,
+            jnp.int32(req.prompt_len), jnp.int32(req.sampling.seed),
+            jnp.float32(req.sampling.temperature),
+            jnp.int32(req.sampling.top_k), prefix,
+        )
+        wall = time.perf_counter() - t0
+        if self.needs_ckpt:  # commit point == post-prefill state
+            slot = jnp.array([req.slot], jnp.int32)
+            grabbed = kv_cache.gather(self.pool.data, self.axes, slot)
+            self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
+        req.committed.append(int(tok))  # T0: deterministic by construction
+        req.prefill_time = self._now
+        self.events.append({
+            "kind": "prefill", "tokens": req.prompt_len + (cfg.num_prefix_embeds or 0),
+            "padded": P + (cfg.num_prefix_embeds or 0), "wall": wall, "iter": self._now,
+        })
+
+    def _prefill_sliding(self, req: Request) -> None:
+        """Chunked prefill for sliding-window archs (<= window per pass).
+        Per-request fixed chunking => still deterministic by construction."""
+        cfg = self.cfg
+        W = cfg.window
+        key = ("prefill_chunk", W)
+        if key not in self._fns:
+            axes = self.axes
+
+            @jax.jit
+            def chunk_fn(params, pool, slot, tokens, start):
+                slots = slot[None]
+                cache = kv_cache.gather(pool, axes, slots)
+                logits, new_cache, _ = forward(
+                    params, cfg, tokens, cache=cache,
+                    start_pos=start[None], schedule=VERIFY_SCHEDULE,
+                )
+                return kv_cache.scatter(pool, axes, slots, new_cache), logits
+
+            self._fns[key] = chunk_fn
+        t0 = time.perf_counter()
+        prompt = req.prompt
+        logits = None
+        for s in range(0, len(prompt), W):
+            chunk = prompt[s : s + W]
+            chunk = chunk + [0] * (W - len(chunk))  # fixed shape per chunk
+            self.pool.data, logits = self._fns[key](
+                self.params, self.pool.data, jnp.int32(req.slot),
+                jnp.array([chunk], jnp.int32), jnp.int32(s),
+            )
+        last = (len(prompt) - 1) % W
+        tok = sample_token(
+            logits[0, last], jnp.int32(req.sampling.seed), jnp.int32(0),
+            jnp.float32(req.sampling.temperature),
+            jnp.int32(req.sampling.top_k),
+        )
+        wall = time.perf_counter() - t0
+        if self.needs_ckpt:
+            slot = jnp.array([req.slot], jnp.int32)
+            grabbed = kv_cache.gather(self.pool.data, self.axes, slot)
+            self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
+        req.committed.append(int(tok))
+        req.prefill_time = self._now
+        self.events.append({
+            "kind": "prefill", "tokens": req.prompt_len,
+            "padded": ((req.prompt_len + W - 1) // W) * W, "wall": wall,
+            "iter": self._now,
+        })
+
+    def _decodable(self) -> List[Request]:
+        out = []
+        max_cand = dvr.candidates_per_window(self.window)
+        for r in self.running:
+            if r.done_decoding():
+                continue
+            if (
+                self.mode == Mode.LLM42
+                and r.sampling.is_deterministic
+                and len(r.candidates) >= max_cand
+            ):
+                continue  # window full; waiting for verification
+            out.append(r)
+        return out
+
+    def _verify_ready(self) -> List[Request]:
+        if self.mode != Mode.LLM42:
+            return []
+        return [r for r in self.running if dvr.ready_for_verify(r, self.window)]
+
+    # ------------------------------------------------------------------
+    # steps
+    # ------------------------------------------------------------------
+
+    def _decode_step(self, batch: List[Request]) -> None:
+        B = len(batch)
+        if self.mode == Mode.BATCH_INVARIANT:
+            schedule = INVARIANT_SCHEDULE
+        else:
+            schedule = self.policy.schedule_for(B)
+        slots = jnp.array([r.slot for r in batch], jnp.int32)
+        last_tok, pos, out_pos, seeds, temps, top_ks = [], [], [], [], [], []
+        for r in batch:
+            seq = r.committed + r.candidates
+            last_tok.append(seq[-1])
+            prefix = getattr(r, "_prefix_len", 0)
+            pos.append(r.prompt_len + prefix + len(seq) - 1)
+            out_pos.append(len(seq))
+            seeds.append(r.sampling.seed)
+            temps.append(r.sampling.temperature)
+            top_ks.append(r.sampling.top_k)
+        t0 = time.perf_counter()
+        self.pool.data, nxt = self._decode_fn(B, schedule)(
+            self.params, self.pool.data, slots,
+            jnp.array(last_tok, jnp.int32), jnp.array(pos, jnp.int32),
+            jnp.array(seeds, jnp.int32), jnp.array(temps, jnp.float32),
+            jnp.array(out_pos, jnp.int32), jnp.array(top_ks, jnp.int32),
+        )
+        wall = time.perf_counter() - t0
+        nxt = [int(t) for t in nxt]
+        for r, t in zip(batch, nxt):
+            if self.mode == Mode.LLM42 and r.sampling.is_deterministic:
+                r.candidates.append(t)
+            else:
+                r.committed.append(t)
+        self.events.append({
+            "kind": "decode", "batch": B, "schedule": tuple(schedule),
+            "ctx_sum": sum(pos) + B, "wall": wall, "iter": self._now,
+        })
+
+    def _verify_step(self, group: List[Request]) -> None:
+        G, W = self.group, self.window
+        rows = group[:G]
+        n_pad = G - len(rows)
+        inputs, cands, cand_lens, starts, bases, slots, seeds, temps, tks = (
+            [], [], [], [], [], [], [], [], []
+        )
+        for r in rows:
+            i, c, cl, sp, ob = dvr.build_verify_row(r, W)
+            inputs.append(i)
+            cands.append(c)
+            cand_lens.append(cl)
+            starts.append(sp)
+            bases.append(ob)
+            slots.append(r.slot)
+            seeds.append(r.sampling.seed)
+            temps.append(r.sampling.temperature)
+            tks.append(r.sampling.top_k)
+        for _ in range(n_pad):
+            inputs.append([0] * W)
+            cands.append([-1] * (W - 1))
+            cand_lens.append(0)
+            starts.append(0)
+            bases.append(0)
+            slots.append(self.pool.scratch_slot)
+            seeds.append(0)
+            temps.append(0.0)
+            tks.append(0)
+        t0 = time.perf_counter()
+        ckpt_in = self.ckpt if self.needs_ckpt else self.pool.data
+        self.pool.data, ckpt_out, n_match, commit_tok, _v = self._verify_fn(
+            self.params, self.pool.data, ckpt_in,
+            jnp.array(slots, jnp.int32), jnp.array(starts, jnp.int32),
+            jnp.array(inputs, jnp.int32), jnp.array(cands, jnp.int32),
+            jnp.array(cand_lens, jnp.int32), jnp.array(seeds, jnp.int32),
+            jnp.array(temps, jnp.float32), jnp.array(bases, jnp.int32),
+            jnp.array(tks, jnp.int32),
+        )
+        if self.needs_ckpt:
+            self.ckpt = ckpt_out
+        wall = time.perf_counter() - t0
+        n_match = [int(n) for n in n_match]
+        commit_tok = [int(t) for t in commit_tok]
+        for r, n, t in zip(rows, n_match, commit_tok):
+            dvr.apply_verify_result(r, n, t)
+        self.events.append({
+            "kind": "verify", "group": len(rows), "window": W, "pad_rows": n_pad,
+            "ctx_sum": sum(starts) + W * G, "wall": wall, "iter": self._now,
+        })
+
+    def _retire(self) -> None:
+        done = [r for r in self.running if r.finished() or (
+            not r.sampling.is_deterministic and r.done_decoding()
+        ) or (self.mode != Mode.LLM42 and r.done_decoding())]
+        for r in done:
+            # a det request must have no outstanding candidates at retirement
+            if self.mode == Mode.LLM42 and r.sampling.is_deterministic and r.candidates:
+                continue
+            r.state = State.FINISHED
+            r.finish_time = self._now
+            self.running.remove(r)
+            self.pool.free(r.slot)
+            r.slot = -1
+            self.finished.append(r)
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+
+    def step(self) -> bool:
+        """One scheduler iteration.  Returns False when fully drained."""
+        self._now += 1
+        self._retire()
+        self._admit()
+        if not self.running and not self.queue:
+            return False
+
+        ready = self._verify_ready()
+        decodable = self._decodable()
+        # verify when a full group is ready, or when decoding is blocked
+        if ready and (len(ready) >= self.group or not decodable):
+            self._verify_step(ready)
+            return True
+        if decodable:
+            self._decode_step(decodable)
+            return True
+        # nothing decodable and nothing to verify: drain stragglers
+        if ready:
+            self._verify_step(ready)
+            return True
+        return bool(self.running or self.queue)
+
+    def run(self, max_iters: int = 100000) -> List[Request]:
+        for _ in range(max_iters):
+            if not self.step():
+                break
+        assert not self.running and not self.queue, "engine did not drain"
+        return self.finished

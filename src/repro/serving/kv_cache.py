@@ -1,0 +1,86 @@
+"""Slot-pool cache manager.
+
+The pool holds per-request recurrent state (attention KV ring buffers /
+ssm states / rwkv states — whatever ``models.transformer.cache_spec``
+says the architecture needs) for ``num_slots`` concurrent requests plus one
+*scratch slot* used as the write target for padding rows in grouped
+verification (so fixed-shape verify passes never corrupt a live request).
+
+``gather(slots)`` / ``scatter(slots, cache)`` convert between the pool
+layout and per-step batched caches; batch axes differ per leaf (layer-
+stacked leaves carry the batch at axis 1), so the axis map is derived once
+from a sentinel-sized spec.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.models.transformer import cache_spec, init_cache
+
+
+_SENTINEL = 1717
+
+
+def batch_axes(cfg: ModelConfig) -> Any:
+    """Pytree (cache structure) of the batch-dim index per leaf."""
+    spec = cache_spec(cfg, _SENTINEL, _SENTINEL + 1)
+
+    def axis_of(s: jax.ShapeDtypeStruct) -> int:
+        idx = [i for i, d in enumerate(s.shape) if d == _SENTINEL]
+        assert len(idx) == 1, f"ambiguous batch axis in {s.shape}"
+        return idx[0]
+
+    return jax.tree_util.tree_map(axis_of, spec)
+
+
+def gather(pool: Any, axes: Any, slots: jax.Array) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a, ax: jnp.take(a, slots, axis=ax), pool, axes
+    )
+
+
+def scatter(pool: Any, axes: Any, slots: jax.Array, update: Any) -> Any:
+    def put(a, ax, u):
+        idx = (slice(None),) * ax + (slots,)
+        return a.at[idx].set(u.astype(a.dtype))
+
+    return jax.tree_util.tree_map(put, pool, axes, update)
+
+
+class CachePool:
+    """Mutable host-side wrapper around the pooled cache pytree."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, capacity: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.capacity = capacity
+        self.axes = batch_axes(cfg)
+        # +1 scratch slot for grouped-verification padding rows
+        self.data = init_cache(cfg, num_slots + 1, capacity)
+        self._free: List[int] = list(range(num_slots))
+
+    @property
+    def scratch_slot(self) -> int:
+        return self.num_slots
+
+    def alloc(self) -> int:
+        return self._free.pop(0)
+
+    def free(self, slot: int) -> None:
+        # reset the slot's position book-keeping so stale entries never mask in
+        def wipe(a, ax):
+            idx = (slice(None),) * ax + (slot,)
+            if a.dtype == jnp.int32:
+                return a.at[idx].set(-1)
+            return a.at[idx].set(jnp.zeros_like(a[idx]))
+
+        self.data = jax.tree_util.tree_map(wipe, self.data, self.axes)
+        self._free.append(slot)
+
+    def num_free(self) -> int:
+        return len(self._free)

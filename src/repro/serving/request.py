@@ -1,0 +1,85 @@
+"""Request lifecycle for the serving engine.
+
+The paper's per-request determinism control (O4) is the
+``SamplingParams.is_deterministic`` flag: deterministic requests go through
+the decode-verify-rollback protocol; everything else streams straight from
+the fast path with zero overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"  # decoding (candidates may be outstanding)
+    AWAITING_VERIFY = "awaiting_verify"  # candidate window full, needs verify
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0  # 0 => greedy (argmax, first-max tiebreak)
+    top_k: int = 0  # 0 => no truncation; deterministic for fixed k
+    seed: int = 42
+    max_new_tokens: int = 64
+    is_deterministic: bool = False  # the paper's new API flag; default False
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival_time: float = 0.0
+
+    # --- runtime state (engine-managed) ---
+    state: State = State.QUEUED
+    slot: int = -1
+    committed: List[int] = dataclasses.field(default_factory=list)
+    candidates: List[int] = dataclasses.field(default_factory=list)
+    # stats
+    num_rollbacks: int = 0
+    num_recomputed_tokens: int = 0
+    num_verify_passes: int = 0
+    prefill_time: float = -1.0
+    finish_time: float = -1.0
+    # encdec / multimodal payloads (stub-frontend outputs)
+    enc_embeds: Optional[object] = None
+    prefix_embeds: Optional[object] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def num_output(self) -> int:
+        """Committed output length (what the user has received)."""
+        return len(self.committed)
+
+    @property
+    def total_generated(self) -> int:
+        return len(self.committed) + len(self.candidates)
+
+    def done_decoding(self) -> bool:
+        """All tokens generated (committed + candidates reach the budget)."""
+        if self.total_generated >= self.sampling.max_new_tokens:
+            return True
+        eos = self.sampling.eos_id
+        if eos is not None and (
+            eos in self.committed or eos in self.candidates
+        ):
+            return True
+        return False
+
+    def finished(self) -> bool:
+        if self.num_output >= self.sampling.max_new_tokens:
+            return True
+        eos = self.sampling.eos_id
+        if eos is not None and eos in self.committed:
+            return True
+        return False

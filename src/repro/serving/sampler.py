@@ -1,0 +1,93 @@
+"""Batch-invariant sampling (paper §4.4 "Sampling").
+
+Greedy (temperature == 0): argmax with first-max tiebreak — ``jnp.argmax``
+returns the first maximal index, matching SGLang's deterministic argmax.
+
+Stochastic: ``multinomial_with_seed`` semantics — Gumbel noise generated
+from a counter-based hash of (seed, output_position), so the sample is a
+pure function of (logits, seed, position) and *independent of batch size or
+position in the batch*.  This replaces torch.multinomial, which consumes a
+global RNG stream and is therefore batch-order dependent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _gumbel_for(seed: jax.Array, position: jax.Array, vocab: int) -> jax.Array:
+    """Counter-based Gumbel noise: pure function of (seed, position)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    key = jax.random.fold_in(key, position)
+    return jax.random.gumbel(key, (vocab,), F32)
+
+
+def sample_token(
+    logits: jax.Array,  # (V,) f32
+    seed: jax.Array,  # scalar int32
+    position: jax.Array,  # scalar int32 — output index of this token
+    temperature: jax.Array,  # scalar f32; 0 => greedy
+    top_k: jax.Array | int = 0,  # 0 => no truncation
+) -> jax.Array:
+    """Sample one token deterministically.  Returns scalar int32.
+
+    top_k truncation is applied by thresholding at the k-th largest logit
+    (ties keep all equal-valued candidates — a pure function of the logits,
+    hence batch-invariant), then Gumbel-argmax over the survivors.  The
+    result is a pure function of (logits, seed, position, temperature,
+    top_k): fixed hyper-parameters => reproducible samples (paper
+    footnote 2's intended semantics).
+    """
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+
+    top_k = jnp.asarray(top_k, jnp.int32)
+    V = logits.shape[-1]
+    # threshold at the top_k-th value (top_k<=0 disables truncation)
+    sorted_desc = jnp.sort(logits)[::-1]
+    kth = sorted_desc[jnp.clip(top_k - 1, 0, V - 1)]
+    keep = (top_k <= 0) | (logits >= kth)
+    masked = jnp.where(keep, logits, -jnp.inf)
+
+    g = _gumbel_for(seed, position, V)
+    t = jnp.maximum(temperature, 1e-6)
+    stochastic = jnp.argmax(masked / t + g).astype(jnp.int32)
+
+    return jnp.where(temperature <= 0.0, greedy, stochastic)
+
+
+def sample_batch(
+    logits: jax.Array,  # (B, V)
+    seeds: jax.Array,  # (B,)
+    positions: jax.Array,  # (B,)
+    temperatures: jax.Array,  # (B,)
+    top_ks: jax.Array | None = None,  # (B,) int32; None => no truncation
+) -> jax.Array:
+    if top_ks is None:
+        top_ks = jnp.zeros(logits.shape[0], jnp.int32)
+    return jax.vmap(sample_token)(logits, seeds, positions, temperatures,
+                                  top_ks)
+
+
+def sample_window(
+    logits: jax.Array,  # (B, W, V)
+    seeds: jax.Array,  # (B,)
+    base_positions: jax.Array,  # (B,) output index of the first window token
+    temperatures: jax.Array,  # (B,)
+    top_ks: jax.Array | None = None,  # (B,)
+) -> jax.Array:
+    """Sample each window position with its own (seed, position) counter."""
+    B, W, V = logits.shape
+    if top_ks is None:
+        top_ks = jnp.zeros(B, jnp.int32)
+    pos = base_positions[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    flat = jax.vmap(sample_token)(
+        logits.reshape(B * W, V),
+        jnp.repeat(seeds, W),
+        pos.reshape(-1),
+        jnp.repeat(temperatures, W),
+        jnp.repeat(top_ks, W),
+    )
+    return flat.reshape(B, W)

@@ -1,0 +1,78 @@
+"""Checkpointing: flat-key npz save/restore for params + optimizer state.
+
+Sharding-aware in the trivially correct way for this repo: arrays are
+device_get (fully gathered) before save and re-sharded by the caller's jit
+in_shardings on restore.  Step metadata travels in the archive.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(template)
+    treedef = jax.tree_util.tree_structure(template)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = {f"params{_SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update(
+            {f"opt{_SEP}{k}": v for k, v in _flatten(opt_state).items()}
+        )
+    payload["__step__"] = np.int64(step)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, path)
+
+
+def restore(
+    path: str, params_template: Any, opt_template: Any = None
+) -> Tuple[Any, Any, int]:
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    step = int(flat.pop("__step__", 0))
+    p_flat = {
+        k[len("params") + len(_SEP):]: v
+        for k, v in flat.items() if k.startswith("params" + _SEP)
+    }
+    params = _unflatten_into(params_template, p_flat)
+    opt_state = None
+    if opt_template is not None:
+        o_flat = {
+            k[len("opt") + len(_SEP):]: v
+            for k, v in flat.items() if k.startswith("opt" + _SEP)
+        }
+        opt_state = _unflatten_into(opt_template, o_flat)
+    return params, opt_state, step

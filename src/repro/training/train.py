@@ -1,0 +1,135 @@
+"""Training step: cross-entropy LM loss (+ MoE aux loss), microbatched
+gradient accumulation, optional remat.
+
+``make_train_step(cfg, opt_cfg, num_microbatches)`` returns a jittable
+function mapping (params, opt_state, batch) -> (params, opt_state, metrics).
+Microbatching scans over the leading batch split so full-scale configs
+(global_batch=256 at 4k) never materialise (B, S, V) logits at once —
+this is what production frameworks do, and it is what keeps the multi-pod
+dry-run's memory analysis sane (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.determinism import Schedule, VERIFY_SCHEDULE
+from repro.models.base import ModelConfig
+from repro.models.transformer import forward_train
+from repro.training.optimizer import AdamWConfig, OptState, apply_updates
+
+F32 = jnp.float32
+
+
+def lm_loss(
+    params: Any,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (b, S)
+    targets: jax.Array,  # (b, S)
+    loss_mask: jax.Array,  # (b, S)
+    *,
+    schedule: Schedule = VERIFY_SCHEDULE,
+    enc_embeds: Optional[jax.Array] = None,
+    remat: bool = True,
+    aux_weight: float = 0.01,
+    unroll: bool = False,
+    denom: Optional[jax.Array] = None,  # global token count (microbatching)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_embeds"] = enc_embeds
+    logits, aux = forward_train(
+        params, cfg, tokens, schedule=schedule, remat=remat, unroll=unroll, **kw
+    )
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (lse - tgt) * loss_mask
+    if denom is None:
+        denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    loss = jnp.sum(ce) / denom
+    total = loss + aux_weight * aux["aux_loss"]
+    metrics = {
+        "loss": loss,
+        "aux_loss": aux["aux_loss"],
+        "dropped_frac": aux["dropped_frac"],
+        "tokens": denom,
+    }
+    return total, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    num_microbatches: int = 1,
+    remat: bool = True,
+    schedule: Schedule = VERIFY_SCHEDULE,
+    unroll: bool = False,
+):
+    """Build train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch: {"tokens": (B, S), "targets": (B, S), "loss_mask": (B, S)
+            [, "enc_embeds": (B, Se, D)]}; B must divide by num_microbatches.
+    """
+
+    def grads_for(params, mb, denom=None):
+        def loss_fn(p):
+            return lm_loss(
+                p, cfg, mb["tokens"], mb["targets"], mb["loss_mask"],
+                schedule=schedule, enc_embeds=mb.get("enc_embeds"),
+                remat=remat, unroll=unroll, denom=denom,
+            )
+
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(params, opt_state: OptState, batch):
+        B = batch["tokens"].shape[0]
+        mb = num_microbatches
+        assert B % mb == 0
+
+        def split(x):
+            return x.reshape(mb, B // mb, *x.shape[1:])
+
+        mbs = {k: split(v) for k, v in batch.items()}
+
+        if mb == 1:  # no accumulation loop (keeps probe cost analysis exact)
+            sq = {k: v[0] for k, v in mbs.items()}
+            grads, metrics = grads_for(params, sq)
+            new_params, new_opt, opt_metrics = apply_updates(
+                opt_cfg, params, grads, opt_state
+            )
+            return new_params, new_opt, {**metrics, **opt_metrics}
+
+        global_denom = jnp.maximum(jnp.sum(batch["loss_mask"]), 1.0)
+
+        def body(carry, mb_batch):
+            acc, _ = carry
+            # each microbatch loss is normalized by the GLOBAL token count,
+            # so summing gradients reproduces the full-batch gradient exactly
+            grads, metrics = grads_for(params, mb_batch, denom=global_denom)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(F32), acc, grads
+            )
+            return (acc, metrics), None
+
+        zero = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, F32), params)
+        dummy_metrics = {
+            "loss": jnp.float32(0), "aux_loss": jnp.float32(0),
+            "dropped_frac": jnp.float32(0), "tokens": jnp.float32(0),
+        }
+        (grads, metrics), _ = jax.lax.scan(body, (zero, dummy_metrics), mbs,
+                                           unroll=unroll)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = {**metrics, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,12 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run on the single real CPU device; only launch/dryrun.py (run as a
+# separate process) uses the 512-device simulation.  Keep f32 exactness.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,101 @@
+"""Unit tests for the reduction-schedule machinery (paper §2.2/O2/O3)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.determinism import (
+    FAST_PATH_POLICY,
+    Schedule,
+    VERIFY_SCHEDULE,
+    matmul,
+    segment_reduce_sum,
+)
+
+
+class TestSchedulePolicy:
+    def test_small_batch_splits_more(self):
+        p = FAST_PATH_POLICY
+        assert p.schedule_for(1).splits > p.schedule_for(100).splits
+
+    def test_schedule_is_shape_function(self):
+        # O2: same batch size -> same schedule, always
+        for b in (1, 3, 17, 64, 500):
+            assert FAST_PATH_POLICY.schedule_for(b) == FAST_PATH_POLICY.schedule_for(b)
+
+    def test_verify_schedule_is_unsplit(self):
+        assert VERIFY_SCHEDULE.splits == 1
+        assert VERIFY_SCHEDULE.kv_splits == 1
+        assert VERIFY_SCHEDULE.moe_no_drop
+
+
+class TestScheduledMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 9),
+        k=st.sampled_from([16, 48, 128]),
+        n=st.integers(1, 17),
+        splits=st.sampled_from([1, 2, 4]),
+    )
+    def test_same_schedule_bitwise(self, m, k, n, splits):
+        """O2: one schedule, one result — bitwise."""
+        kx, kw = jax.random.split(jax.random.key(m * 1000 + k + n))
+        x = jax.random.normal(kx, (m, k))
+        w = jax.random.normal(kw, (k, n))
+        s = Schedule(splits=splits, combine_dtype="bfloat16")
+        a = matmul(x, w, s)
+        b = matmul(x, w, s)
+        assert (a == b).all()
+
+    def test_different_splits_drift(self):
+        kx, kw = jax.random.split(jax.random.key(7))
+        x = jax.random.normal(kx, (8, 1024))
+        w = jax.random.normal(kw, (1024, 64))
+        a = matmul(x, w, Schedule(splits=1, combine_dtype="bfloat16"))
+        b = matmul(x, w, Schedule(splits=8, combine_dtype="bfloat16"))
+        # different reduction trees must not agree bitwise at this size
+        assert not (a == b).all()
+        # but they are numerically close (it is *rounding*, not error)
+        assert jnp.allclose(a, b, atol=0.5, rtol=0.1)
+
+    def test_position_invariance(self):
+        """O2/O3: a row's result is independent of the other rows, given a
+        fixed schedule — the property the verifier's guarantee rests on."""
+        kx, kw = jax.random.split(jax.random.key(3))
+        x = jax.random.normal(kx, (16, 256))
+        w = jax.random.normal(kw, (256, 32))
+        s = Schedule(splits=4, combine_dtype="bfloat16")
+        full = matmul(x, w, s)
+        perm = jnp.array([5, 3, 11, 0, 15, 8, 2, 9, 1, 14, 7, 4, 10, 6, 13, 12])
+        permuted = matmul(x[perm], w, s)
+        assert (full[perm] == permuted).all()
+
+    def test_split1_matches_f32_reference(self):
+        kx, kw = jax.random.split(jax.random.key(5))
+        x = jax.random.normal(kx, (4, 64))
+        w = jax.random.normal(kw, (64, 8))
+        got = matmul(x, w, VERIFY_SCHEDULE)
+        want = jnp.matmul(x, w, precision=jax.lax.Precision.HIGHEST)
+        assert jnp.allclose(got, want, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.sampled_from([32, 100, 256]),
+        splits=st.sampled_from([2, 3, 5]),
+    )
+    def test_uneven_split_still_deterministic(self, k, splits):
+        kx, kw = jax.random.split(jax.random.key(k))
+        x = jax.random.normal(kx, (4, k))
+        w = jax.random.normal(kw, (k, 8))
+        s = Schedule(splits=splits, combine_dtype="bfloat16")
+        assert (matmul(x, w, s) == matmul(x, w, s)).all()
+
+
+class TestSegmentReduce:
+    def test_schedule_dependent_norm_reduction(self):
+        x = jax.random.normal(jax.random.key(0), (4, 1024)) * 100
+        a = segment_reduce_sum(x, -1, Schedule(splits=1))
+        b = segment_reduce_sum(x, -1, Schedule(splits=8, combine_dtype="bfloat16"))
+        assert not (a == b).all()
+        assert jnp.allclose(a, b, rtol=0.05, atol=10.0)

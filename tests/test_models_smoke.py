@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (deliverable (f)).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(<=4 layers, d_model<=512, <=4 experts), run one forward pass AND one train
+step on CPU, assert output shapes and absence of NaNs; plus cached-prefill
+vs full-causal bitwise-level consistency (the invariant DVR's KV-repair
+correctness rests on).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import (
+    build_cross_cache,
+    forward,
+    forward_train,
+    init_cache,
+    init_params,
+)
+from repro.models.multimodal import audio_frames
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train import make_train_step
+
+ARCHS = list_archs()
+B, S = 2, 16
+
+
+def _setup(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_embeds"] = audio_frames(
+            jax.random.key(2), B, cfg.encoder_seq_len, cfg.d_model
+        )
+    return cfg, params, toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params, toks, kw = _setup(arch)
+    logits, aux = forward_train(params, cfg, toks, **kw)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: non-finite logits"
+    assert jnp.isfinite(aux["aux_loss"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg, params, toks, kw = _setup(arch)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(total_steps=10),
+                                   num_microbatches=1))
+    batch = {
+        "tokens": toks,
+        "targets": jnp.roll(toks, -1, axis=1),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = kw["enc_embeds"]
+    params2, opt2, metrics = step(params, init_opt_state(params), batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    # parameters actually moved
+    moved = any(
+        not (a == b).all()
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved, f"{arch}: train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cached_prefill_matches_train_forward(arch):
+    """Prefill through the cache path must agree with the causal pass —
+    the foundation of verifier/fast-path comparability."""
+    cfg, params, toks, kw = _setup(arch)
+    ref_logits, _ = forward_train(params, cfg, toks, **kw)
+    cache = init_cache(cfg, B, 64)
+    if cfg.family == "encdec":
+        cache["cross"] = build_cross_cache(params, cfg, kw["enc_embeds"])
+    got, _, _ = forward(params, cfg, toks, cache=cache,
+                        start_pos=jnp.zeros(B, jnp.int32))
+    assert jnp.allclose(got, ref_logits, atol=2e-4), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_incremental_decode_consistent_with_prefill(arch):
+    """Prefill(t0..t14) + decode(t15) == prefill(t0..t15), last logits."""
+    cfg, params, toks, kw = _setup(arch)
+    cache_a = init_cache(cfg, B, 64)
+    cache_b = init_cache(cfg, B, 64)
+    if cfg.family == "encdec":
+        cross = build_cross_cache(params, cfg, kw["enc_embeds"])
+        cache_a["cross"] = cross
+        cache_b["cross"] = cross
+    full, _, _ = forward(params, cfg, toks, cache=cache_a,
+                         start_pos=jnp.zeros(B, jnp.int32))
+    part, cache_b, _ = forward(params, cfg, toks[:, :-1], cache=cache_b,
+                               start_pos=jnp.zeros(B, jnp.int32))
+    last, _, _ = forward(params, cfg, toks[:, -1:], cache=cache_b,
+                         start_pos=jnp.full((B,), S - 1, jnp.int32))
+    assert jnp.allclose(last[:, 0], full[:, -1], atol=2e-4), arch
+
+
+def test_sliding_window_variants_consistent():
+    """Ring-buffer cache == full causal pass, when fed in window-sized
+    chunks (the ring-buffer contract: <= window tokens per pass)."""
+    cfg = dataclasses.replace(
+        get_smoke_config("phi3-mini-3.8b"), attn_kind="sliding", window=8
+    )
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 24), 0, cfg.vocab_size)
+    ref_logits, _ = forward_train(params, cfg, toks)
+    ring = init_cache(cfg, 1, 64)  # init_cache clamps attn capacity to window
+    outs = []
+    for s in range(0, 24, 8):
+        lg, ring, _ = forward(params, cfg, toks[:, s : s + 8], cache=ring,
+                              start_pos=jnp.full(1, s, jnp.int32))
+        outs.append(lg)
+    got = jnp.concatenate(outs, axis=1)
+    assert jnp.allclose(got, ref_logits, atol=2e-4)
+
+
+def test_ring_buffer_overflow_rejected():
+    cfg = dataclasses.replace(
+        get_smoke_config("phi3-mini-3.8b"), attn_kind="sliding", window=8
+    )
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 200), 0, cfg.vocab_size)
+    ring = init_cache(cfg, 1, 64)  # capacity = window + RING_SLACK = 136
+    with pytest.raises(AssertionError, match="chunk"):
+        forward(params, cfg, toks, cache=ring,
+                start_pos=jnp.zeros(1, jnp.int32))
+
+
+def test_moe_router_flips_under_schedule_change():
+    """MoE expert selection itself is reduction-schedule sensitive — the
+    family where the paper's O1 flips are most likely (DESIGN.md §4)."""
+    from repro.core.determinism import Schedule
+
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+    a, _ = forward_train(params, cfg, toks,
+                         schedule=Schedule(splits=1, combine_dtype="bfloat16"))
+    b, _ = forward_train(params, cfg, toks,
+                         schedule=Schedule(splits=8, combine_dtype="bfloat16"))
+    assert not (a == b).all()

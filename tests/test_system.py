@@ -1,0 +1,232 @@
+"""End-to-end behaviour tests for LLM-42 (the paper's determinism claims).
+
+The headline property (paper abstract): a request with
+``is_deterministic=True`` produces bitwise-identical output across runs,
+*whatever* the co-batched traffic — while fast-path decoding stays
+dynamically batched.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.determinism import (
+    FAST_PATH_POLICY,
+    Mode,
+    ReductionPolicy,
+)
+from repro.models import init_params
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams
+
+
+def _prompt(i, n=10, vocab=512):
+    import random
+
+    r = random.Random(i)
+    return [r.randrange(vocab) for _ in range(n)]
+
+
+def _run(cfg, params, rids, det_rids, *, mode=Mode.LLM42, window=5, group=2,
+         max_new=20, temperature=0.0, policy=FAST_PATH_POLICY, arrivals=None):
+    eng = Engine(cfg, params, mode=mode, policy=policy, window=window,
+                 group=group, max_batch=8, capacity=256)
+    for j, i in enumerate(rids):
+        eng.submit(Request(
+            rid=i, prompt=_prompt(i, vocab=cfg.vocab_size),
+            sampling=SamplingParams(
+                max_new_tokens=max_new, is_deterministic=(i in det_rids),
+                seed=100 + i, temperature=temperature,
+            ),
+        ))
+    done = {r.rid: r for r in eng.run()}
+    return done, eng
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_smoke_config("llama3-8b")
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def ssm():
+    cfg = get_smoke_config("rwkv6-3b")
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def hybrid():
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+class TestDeterminismProperty:
+    """Same det request, three different traffic mixes -> identical output."""
+
+    def test_dense_greedy(self, dense):
+        cfg, params = dense
+        a, _ = _run(cfg, params, [0], {0})
+        b, _ = _run(cfg, params, [0, 1, 2, 3, 4], {0})
+        c, _ = _run(cfg, params, [0, 1, 2], {0, 2})
+        assert a[0].committed == b[0].committed == c[0].committed
+
+    def test_dense_stochastic_sampling(self, dense):
+        cfg, params = dense
+        a, _ = _run(cfg, params, [0], {0}, temperature=0.8)
+        b, _ = _run(cfg, params, [0, 1, 2, 3], {0}, temperature=0.8)
+        assert a[0].committed == b[0].committed
+
+    def test_dense_top_k_sampling(self, dense):
+        """Fixed (temperature, top_k, seed) hyper-params => deterministic
+        output (paper footnote 2's intended semantics)."""
+        cfg, params = dense
+
+        def run_tk(rids):
+            eng = Engine(cfg, params, mode=Mode.LLM42, policy=FAST_PATH_POLICY,
+                         window=5, group=2, max_batch=8, capacity=256)
+            for i in rids:
+                eng.submit(Request(
+                    rid=i, prompt=_prompt(i, vocab=cfg.vocab_size),
+                    sampling=SamplingParams(
+                        max_new_tokens=16, is_deterministic=(i == 0),
+                        seed=100 + i, temperature=0.9, top_k=10,
+                    ),
+                ))
+            return {r.rid: r for r in eng.run()}
+
+        a = run_tk([0])
+        b = run_tk([0, 1, 2, 3])
+        assert a[0].committed == b[0].committed
+
+    def test_moe(self, moe):
+        cfg, params = moe
+        a, _ = _run(cfg, params, [0], {0}, max_new=16)
+        b, _ = _run(cfg, params, [0, 1, 2, 3], {0}, max_new=16)
+        assert a[0].committed == b[0].committed
+
+    def test_ssm_state_checkpointing(self, ssm):
+        """SSM rollback uses state checkpoints, not KV truncation
+        (beyond-paper extension, DESIGN.md §4)."""
+        cfg, params = ssm
+        a, _ = _run(cfg, params, [0], {0}, max_new=16)
+        b, _ = _run(cfg, params, [0, 1, 2, 3], {0}, max_new=16)
+        assert a[0].committed == b[0].committed
+
+    def test_hybrid_mixed_state_repair(self, hybrid):
+        cfg, params = hybrid
+        a, _ = _run(cfg, params, [0], {0}, max_new=12)
+        b, _ = _run(cfg, params, [0, 1, 2], {0}, max_new=12)
+        assert a[0].committed == b[0].committed
+
+    def test_multiple_det_requests_all_consistent(self, dense):
+        cfg, params = dense
+        a, _ = _run(cfg, params, [0, 1, 2, 3], {0, 1, 2, 3})
+        b, _ = _run(cfg, params, [0, 1, 2, 3, 4, 5], {0, 1, 2, 3})
+        for rid in (0, 1, 2, 3):
+            assert a[rid].committed == b[rid].committed, rid
+
+
+class TestFastPathNondeterminism:
+    """The problem being solved must actually exist in our system: nondet
+    requests may diverge across batch mixes (floating-point + schedules)."""
+
+    def test_nondet_can_diverge(self, dense):
+        cfg, params = dense
+        # aggressive policy to make flips likely at toy scale
+        policy = ReductionPolicy(
+            thresholds=((2, 16), (4, 8), (8, 4)), combine_dtype="bfloat16"
+        )
+        diverged = False
+        for seed_set in range(6):
+            rids = [0] + list(range(10 * seed_set + 1, 10 * seed_set + 4))
+            a, _ = _run(cfg, params, [0], set(), policy=policy, max_new=32)
+            b, _ = _run(cfg, params, rids, set(), policy=policy, max_new=32)
+            if a[0].committed != b[0].committed:
+                diverged = True
+                break
+        assert diverged, (
+            "fast path never diverged — the determinism problem would be "
+            "vacuous in this setup"
+        )
+
+
+class TestModes:
+    def test_batch_invariant_mode_deterministic(self, dense):
+        """The He-et-al. baseline: global determinism without verification."""
+        cfg, params = dense
+        a, ea = _run(cfg, params, [0], set(), mode=Mode.BATCH_INVARIANT)
+        b, eb = _run(cfg, params, [0, 1, 2, 3, 4], set(), mode=Mode.BATCH_INVARIANT)
+        assert a[0].committed == b[0].committed
+        assert not any(e["kind"] == "verify" for e in eb.events)
+
+    def test_nondet_mode_has_no_verification(self, dense):
+        cfg, params = dense
+        _, eng = _run(cfg, params, [0, 1], {0}, mode=Mode.NONDET)
+        assert not any(e["kind"] == "verify" for e in eng.events)
+
+    def test_llm42_verifies_only_det_traffic(self, dense):
+        cfg, params = dense
+        _, eng = _run(cfg, params, [0, 1, 2, 3], set())
+        assert not any(e["kind"] == "verify" for e in eng.events)
+        _, eng2 = _run(cfg, params, [0, 1, 2, 3], {0})
+        assert any(e["kind"] == "verify" for e in eng2.events)
+
+
+class TestDVRMechanics:
+    def test_forward_progress_and_budget(self, dense):
+        cfg, params = dense
+        done, _ = _run(cfg, params, list(range(6)), set(range(6)), max_new=17)
+        for r in done.values():
+            assert len(r.committed) == 17
+
+    def test_rollback_accounting(self, dense):
+        cfg, params = dense
+        policy = ReductionPolicy(
+            thresholds=((2, 16), (4, 8), (8, 4)), combine_dtype="bfloat16"
+        )
+        done, _ = _run(cfg, params, list(range(6)), {0, 1, 2}, policy=policy,
+                       max_new=24)
+        for r in done.values():
+            assert r.num_recomputed_tokens >= r.num_rollbacks * 0
+            if r.num_rollbacks:
+                assert r.num_recomputed_tokens > 0
+            assert len(r.committed) == 24
+
+    def test_verify_touches_only_det_rows(self, dense):
+        """Grouped verification with padding must not corrupt live nondet
+        requests: nondet outputs identical with/without a det neighbour."""
+        cfg, params = dense
+        a, _ = _run(cfg, params, [1, 2], set())
+        b, _ = _run(cfg, params, [1, 2, 0], {0})
+        # co-batching CAN change nondet bits (schedule changes), so compare
+        # against a same-traffic-shape run instead: determinism of the
+        # engine itself given identical inputs.
+        c, _ = _run(cfg, params, [1, 2, 0], {0})
+        assert b[1].committed == c[1].committed
+        assert b[2].committed == c[2].committed
+
+    def test_grouped_verification_group_independence(self, dense):
+        """O3 for groups: a det request's output must not depend on WHICH
+        requests share its verification group."""
+        cfg, params = dense
+        a, _ = _run(cfg, params, [0, 7, 8], {0, 7, 8}, group=3)
+        b, _ = _run(cfg, params, [0, 11, 12], {0, 11, 12}, group=3)
+        assert a[0].committed == b[0].committed
+
+    def test_window_size_does_not_change_output(self, dense):
+        """Window alignment must be invisible (position-consistency O3):
+        different W => different verify boundaries, same committed tokens."""
+        cfg, params = dense
+        outs = []
+        for w in (3, 5, 9):
+            d, _ = _run(cfg, params, [0, 1], {0}, window=w, max_new=20)
+            outs.append(d[0].committed)
+        assert outs[0] == outs[1] == outs[2]
