@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro import configs as config_registry
-from repro.core.determinism import FAST_PATH_POLICY, Mode, ReductionPolicy
+from repro.core.determinism import Mode, ReductionPolicy
 from repro.models import init_params
 from repro.serving import costmodel
 from repro.serving.engine import Engine
@@ -69,10 +69,11 @@ def make_requests(
 def run_scenario(
     cfg, params, requests: List[Request], *, mode: Mode = Mode.LLM42,
     window: int = 8, group: int = 4, max_batch: int = 8, capacity: int = 256,
-    policy: ReductionPolicy = BENCH_POLICY,
+    policy: ReductionPolicy = BENCH_POLICY, scheduler=None,
 ) -> Dict:
     eng = Engine(cfg, params, mode=mode, policy=policy, window=window,
-                 group=group, max_batch=max_batch, capacity=capacity)
+                 group=group, max_batch=max_batch, capacity=capacity,
+                 scheduler=scheduler)
     for r in requests:
         eng.submit(r)
     t0 = time.time()

@@ -9,20 +9,21 @@ drives 4xH100 at 12–18 QPS; our single-chip sim saturates lower).
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.determinism import Mode
 from repro.serving.online import percentile, run_online
 from repro.serving.engine import Engine
+from repro.serving.scheduler import OverlapPolicy, PauseDecodePolicy
 from benchmarks.common import (
     BENCH_POLICY, bench_model, full_config, make_requests,
 )
 from repro.training.data import poisson_arrivals
 
 
-def _run(cfg, params, fcfg, n, qps, det_ratio, mode, seed=0):
+def _run(cfg, params, fcfg, n, qps, det_ratio, mode, seed=0, scheduler=None):
     engine = Engine(cfg, params, mode=mode, policy=BENCH_POLICY,
-                    window=8, group=4, max_batch=8, capacity=256)
+                    window=8, group=4, max_batch=8, capacity=256,
+                    scheduler=scheduler)
     reqs = make_requests(cfg, n, det_ratio, max_new=24, seed=seed)
     arrivals = poisson_arrivals(n, qps, seed=seed)
     res = run_online(engine, fcfg, list(zip(reqs, arrivals)),
@@ -57,4 +58,13 @@ def run(n: int = 24, qps: float = 40.0):
         rows.append((f"fig11_llm42_{pct}pct_p99_ms", "", round(r["p99"] * 1e3, 1)))
         rows.append((f"table5_llm42_{pct}pct_ttft_p50_ms", "",
                      round(r["ttft_p50"] * 1e3, 2)))
+
+    # scheduler ablation at the 50% mix: pause-decode (paper prototype,
+    # §5.2 limitation (1)) vs the default overlapped scheduler
+    pa = _run(cfg, params, fcfg, n, qps, 0.5, Mode.LLM42,
+              scheduler=PauseDecodePolicy())
+    ov = _run(cfg, params, fcfg, n, qps, 0.5, Mode.LLM42,
+              scheduler=OverlapPolicy())
+    rows.append(("fig11_llm42_50pct_pause_p99_ms", "", round(pa["p99"] * 1e3, 1)))
+    rows.append(("fig11_llm42_50pct_overlap_p99_ms", "", round(ov["p99"] * 1e3, 1)))
     return rows

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from benchmarks.common import (
     bench_model, full_config, make_requests, run_scenario,
-    simulated_throughput,
 )
 from repro.serving import costmodel
 

@@ -19,7 +19,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.determinism import Schedule
 from repro.kernels import ref
 from repro.serving.costmodel import V5E
 

@@ -13,6 +13,7 @@ Reported: simulated TPU-v5e decode throughput (tokens/s) per scenario.
 from __future__ import annotations
 
 from repro.core.determinism import Mode
+from repro.serving.scheduler import OverlapPolicy, PauseDecodePolicy
 from benchmarks.common import (
     bench_model, full_config, make_requests, run_scenario,
     simulated_throughput,
@@ -48,13 +49,30 @@ def run():
 
     reqs = make_requests(cfg, B + 1, 0.0, max_new)
     reqs[0].sampling.is_deterministic = True
-    r4 = run_scenario(cfg, params, reqs, mode=Mode.LLM42, window=8, group=1)
+    r4 = run_scenario(cfg, params, reqs, mode=Mode.LLM42, window=8, group=1,
+                      scheduler=PauseDecodePolicy())
     tput4 = simulated_throughput(fcfg, r4)
-    rows.append(("fig5_llm42_B+1_1det",
+    rows.append(("fig5_llm42_pause_B+1_1det",
                  round(r4["wall_s"] * 1e6 / max(r4["out_tokens"], 1), 1),
                  round(tput4, 1)))
 
-    # headline ratios (paper: LLM-42 2.2x over SGLang-Det, within 3% of best)
+    # the overlapped scheduler (default): verify runs beside the decode batch
+    reqs = make_requests(cfg, B + 1, 0.0, max_new)
+    reqs[0].sampling.is_deterministic = True
+    r5 = run_scenario(cfg, params, reqs, mode=Mode.LLM42, window=8, group=1,
+                      scheduler=OverlapPolicy())
+    tput5 = simulated_throughput(fcfg, r5)
+    rows.append(("fig5_llm42_overlap_B+1_1det",
+                 round(r5["wall_s"] * 1e6 / max(r5["out_tokens"], 1), 1),
+                 round(tput5, 1)))
+
+    # headline ratios (paper: LLM-42 2.2x over SGLang-Det, within 3% of
+    # best) — computed from the PAUSE run, the paper prototype's scheduler,
+    # so these rows stay comparable to the paper and to earlier revisions;
+    # the overlap scheduler's variants are reported separately
     rows.append(("fig5_llm42_over_batchinv", "", round(tput4 / max(tput3, 1e-9), 3)))
     rows.append(("fig5_llm42_vs_nondet_frac", "", round(tput4 / max(tput2, 1e-9), 3)))
+    rows.append(("fig5_llm42_overlap_over_batchinv", "",
+                 round(tput5 / max(tput3, 1e-9), 3)))
+    rows.append(("fig5_overlap_over_pause", "", round(tput5 / max(tput4, 1e-9), 3)))
     return rows

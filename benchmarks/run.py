@@ -25,6 +25,7 @@ def main() -> None:
         fig10_offline,
         fig11_online,
         fig12_grouped,
+        fig_overlap,
     )
 
     suites = [
@@ -35,6 +36,7 @@ def main() -> None:
         ("fig10+table4", fig10_offline.run),
         ("fig11+table5", fig11_online.run),
         ("fig12", fig12_grouped.run),
+        ("fig_overlap", fig_overlap.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -11,13 +11,26 @@ Commit rule (paper Fig. 8): commit the leading run of matching candidates
 plus the verifier token at the first mismatch (or the trailing verifier
 token on a full match).  Every verify pass commits >= 1 token — guaranteed
 forward progress.
+
+In-flight verification (scheduler ``OverlapPolicy``, beyond §5.2
+limitation (1)): a window can be *submitted* (``begin_inflight``) without
+pausing the request — the candidates move to ``req.inflight`` and the fast
+path keeps appending fresh candidates behind it.  When the result lands,
+``apply_inflight_result`` splices the commit underneath the outstanding
+candidates: the committed stream is extended exactly as in the synchronous
+path, and the speculated-past tokens survive only if the first of them
+agrees with the verifier's commit token (they were conditioned on it);
+otherwise they are invalidated and recomputed — a rollback that reaches
+*past* the verified window.  Either way the committed stream is the same
+deterministic reference sequence, which is why policies are interchangeable
+bit-for-bit.
 """
 
 from __future__ import annotations
 
 from typing import List, Tuple
 
-from repro.serving.request import Request, State
+from repro.serving.request import InflightVerify, Request, State
 
 
 def candidates_per_window(window: int) -> int:
@@ -31,6 +44,8 @@ def ready_for_verify(req: Request, window: int) -> bool:
         return False
     if req.state == State.FINISHED or not req.candidates:
         return False
+    if req.inflight is not None:
+        return False  # one outstanding window per request
     return (
         len(req.candidates) >= candidates_per_window(window)
         or req.done_decoding()
@@ -70,7 +85,74 @@ def apply_verify_result(req: Request, n_match: int, commit_tok: int) -> None:
         req.num_rollbacks += 1
         req.num_recomputed_tokens += rejected
 
+    _clamp_budget(req)
+
+
+def _clamp_budget(req: Request) -> None:
     # clamp to the output budget (the verifier may add one token past it)
     budget = req.sampling.max_new_tokens
     if len(req.committed) > budget:
         req.committed = req.committed[:budget]
+    if len(req.committed) >= budget:
+        # budget reached: any outstanding speculation is moot
+        req.candidates = []
+
+
+def begin_inflight(
+    req: Request, window: int, submitted_iter: int, ready_iter: int
+) -> InflightVerify:
+    """Move the window's candidates out of the speculation buffer and mark
+    them as submitted-for-verification.  The request may keep decoding —
+    fresh candidates append to the (now shorter) ``req.candidates`` and are
+    positioned *after* the in-flight window."""
+    assert req.inflight is None, "one outstanding verify window per request"
+    k = candidates_per_window(window)
+    submitted = req.candidates[:k]
+    req.candidates = req.candidates[k:]
+    req.inflight = InflightVerify(
+        cands=submitted, submitted_iter=submitted_iter, ready_iter=ready_iter
+    )
+    return req.inflight
+
+
+def apply_inflight_result(req: Request) -> None:
+    """Splice an in-flight window's verdict under the outstanding candidates.
+
+    Commit rule is identical to ``apply_verify_result`` applied to the
+    *submitted* candidates.  The speculated-past candidates (decoded while
+    the window was in flight) survive only on a full match whose commit
+    token equals the first speculated token — i.e. the continuation was
+    conditioned on exactly the tokens that ended up committed.  Any other
+    outcome invalidates them: they descend from a token the verifier rolled
+    back (or from a candidate beyond the budget), so they are discarded and
+    counted as recomputed.
+    """
+    fl = req.inflight
+    assert fl is not None and fl.n_match >= 0, "no completed in-flight verify"
+    k = len(fl.cands)
+    n_match = min(fl.n_match, k)
+    rejected = k - n_match
+
+    req.committed.extend(fl.cands[:n_match])
+    req.committed.append(int(fl.commit_tok))
+    req.num_verify_passes += 1
+
+    full_match = n_match == k
+    keep_tail = (
+        full_match
+        and bool(req.candidates)
+        and req.candidates[0] == int(fl.commit_tok)
+    )
+    if keep_tail:
+        # commit_tok subsumes the first speculated-past token; the rest
+        # remain valid candidates for the next window
+        req.candidates = req.candidates[1:]
+    else:
+        rejected += len(req.candidates)
+        req.candidates = []
+    if rejected > 0:
+        req.num_rollbacks += 1
+        req.num_recomputed_tokens += rejected
+
+    req.inflight = None
+    _clamp_budget(req)

@@ -7,7 +7,7 @@ measure the first/second consistent spans of the output.
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Sequence
+from typing import NamedTuple, Sequence
 
 
 class SpanStats(NamedTuple):

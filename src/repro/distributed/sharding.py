@@ -20,7 +20,7 @@ never used twice in one PartitionSpec (GSPMD requirement); first dim wins.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import numpy as np

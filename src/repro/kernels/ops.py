@@ -10,7 +10,6 @@ implementation validated against the same oracle.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

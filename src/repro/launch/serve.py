@@ -24,6 +24,7 @@ from repro.models.multimodal import audio_frames, vision_embeds
 from repro.serving import costmodel
 from repro.serving.engine import Engine
 from repro.serving.request import Request, SamplingParams
+from repro.serving.scheduler import OverlapPolicy, PauseDecodePolicy
 from repro.training.data import SHAREGPT, sample_workload
 
 
@@ -73,6 +74,9 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--workload", default="synthetic",
                     choices=["synthetic", "sharegpt"])
+    ap.add_argument("--scheduler", default="default",
+                    choices=["default", "overlap", "pause"],
+                    help="verify/decode policy (default: overlap for llm42)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -85,6 +89,11 @@ def main() -> None:
         cfg, params, mode=Mode(args.mode), policy=FAST_PATH_POLICY,
         window=args.window, group=args.group, max_batch=args.max_batch,
         capacity=min(cfg.max_seq_len, 512),
+        scheduler={
+            "default": None,
+            "overlap": OverlapPolicy(),
+            "pause": PauseDecodePolicy(),
+        }[args.scheduler],
     )
     reqs = build_requests(cfg, args.requests, args.det_ratio, args.max_new,
                           args.seed, args.workload)
@@ -109,6 +118,7 @@ def main() -> None:
           f"-> {out_tokens / sim['total_s']:.0f} tok/s "
           f"(decode {sim.get('decode_s', 0) * 1e3:.1f} ms, "
           f"verify {sim.get('verify_s', 0) * 1e3:.1f} ms, "
+          f"overlapped {sim.get('overlap_s', 0) * 1e3:.1f} ms, "
           f"prefill {sim.get('prefill_s', 0) * 1e3:.1f} ms)")
 
 

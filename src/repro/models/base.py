@@ -14,7 +14,7 @@ passes can ``jax.lax.scan`` over layers — this keeps compiled HLO compact
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ State layout (per layer, per request):
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

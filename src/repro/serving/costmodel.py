@@ -19,6 +19,15 @@ effective compute utilisation ~ min(1, rows * splits / SAT_ROWS).  split-K
 raises utilisation exactly as on GPU (it exists to fill SMs/MXU at low
 occupancy); the batch-invariant kernel is pinned to splits=1 and eats the
 low-utilisation penalty — this is the mechanism behind paper Fig. 5.
+
+Overlapped iterations (scheduler ``OverlapPolicy``): a composite ``overlap``
+event carries its decode and verify sub-events.  Neither pass alone fills
+the chip (decode is HBM-bound at small batch, the verify window is a short
+fixed-shape pass), so running them concurrently hides most of the shorter
+pass: t = max(t_dec, t_ver) + ``overlap_serial_frac`` * min(t_dec, t_ver),
+the serial fraction modeling shared-resource contention (HBM bandwidth,
+scheduler gaps).  This is always <= t_dec + t_ver — the pause policy's
+cost — and >= max of the two, i.e. overlap is never modeled as free.
 """
 
 from __future__ import annotations
@@ -42,6 +51,9 @@ class Hardware:
     # a few in flight)
     sat_rows: int = 256
     dtype_bytes: int = 2  # bf16 weights/KV at serving time
+    # fraction of the shorter pass NOT hidden when verify overlaps decode
+    # (contention on HBM + inter-pass scheduling gaps)
+    overlap_serial_frac: float = 0.35
 
 
 V5E = Hardware()
@@ -84,12 +96,38 @@ def attn_flops(cfg: ModelConfig, tokens: int, ctx: float) -> float:
     return 4.0 * n_attn * tokens * ctx * cfg.num_heads * cfg.hd
 
 
+def flatten_events(
+    events: Iterable[Dict[str, Any]],
+) -> List[Dict[str, Any]]:
+    """Expand composite ``overlap`` events into their leaf sub-events.
+
+    For consumers that inspect per-pass metadata (tests, span analyses);
+    time accounting must instead go through ``step_time``/``simulate``,
+    which charge an overlapped pair as concurrent rather than serial.
+    """
+    out: List[Dict[str, Any]] = []
+    for ev in events:
+        if ev.get("kind") == "overlap":
+            out.append(ev["decode"])
+            out.append(ev["verify"])
+        else:
+            out.append(ev)
+    return out
+
+
 def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float:
     """Simulated seconds for one engine event on one chip."""
+    kind = ev["kind"]
+    if kind == "overlap":
+        sub = [dict(ev["decode"]), dict(ev["verify"])]
+        if ev.get("invariant"):
+            for s in sub:
+                s["invariant"] = True
+        td, tv = (step_time(cfg, s, hw) for s in sub)
+        return max(td, tv) + hw.overlap_serial_frac * min(td, tv)
+
     pbytes = cfg.active_param_count() * hw.dtype_bytes
     kvb = kv_bytes_per_token(cfg, hw.dtype_bytes)
-
-    kind = ev["kind"]
     if kind == "prefill":
         tokens = ev["padded"]
         ctx = tokens / 2

@@ -10,10 +10,15 @@ Three modes (paper §5 baselines):
                                 decode-verify-rollback for requests with
                                 ``is_deterministic=True``.
 
-The engine is intentionally faithful to the paper's prototype scheduling:
-prefill is per-request (deterministic by construction, never co-batched);
-verification "pauses" decoding (their §5.2 limitation (1)); decode batches
-are formed from all running requests each iteration (continuous batching).
+Per-iteration verify/decode arbitration is delegated to the scheduler
+subsystem (``serving.scheduler``): ``PauseDecodePolicy`` reproduces the
+paper prototype's behaviour (verification pauses decoding, §5.2 limitation
+(1)); ``OverlapPolicy`` — the default for ``Mode.LLM42`` — co-schedules the
+verify group alongside the same iteration's decode batch, with per-request
+in-flight-verify state (``core.dvr``) so a request keeps speculating past a
+window already submitted.  Prefill stays per-request (deterministic by
+construction, never co-batched); decode batches are formed from all
+decodable requests each iteration (continuous batching).
 
 Every device step goes through a jitted function cached per *shape class*
 (batch size, prompt bucket, window) — recompilation per shape is exactly
@@ -26,9 +31,8 @@ benchmark harness replays it through the TPU cost model
 
 from __future__ import annotations
 
-import functools
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +50,7 @@ from repro.core.verifier import make_verify_fn
 from repro.models.base import ModelConfig
 from repro.models.transformer import build_cross_cache, forward
 from repro.serving import kv_cache
+from repro.serving import scheduler as sched
 from repro.serving.request import Request, State
 from repro.serving.sampler import sample_batch, sample_token
 
@@ -70,6 +75,8 @@ class Engine:
         group: int = 4,  # requests verified together (grouped verification)
         max_batch: int = 8,
         capacity: Optional[int] = None,
+        scheduler: Optional[sched.SchedulePolicy] = None,
+        verify_latency: int = 1,  # iterations until an overlapped verdict lands
     ):
         self.cfg = cfg
         self.params = params
@@ -89,6 +96,10 @@ class Engine:
             jax.tree_util.tree_map(jnp.copy, self.pool.data)
             if self.needs_ckpt else None
         )
+
+        self.scheduler = scheduler if scheduler is not None else sched.default_policy(mode)
+        assert verify_latency >= 1, "a verdict cannot land before its launch"
+        self.verify_latency = verify_latency
 
         self.queue: List[Request] = []
         self.running: List[Request] = []
@@ -283,31 +294,25 @@ class Engine:
             "iter": self._now,
         })
 
-    def _decodable(self) -> List[Request]:
-        out = []
-        max_cand = dvr.candidates_per_window(self.window)
-        for r in self.running:
-            if r.done_decoding():
-                continue
-            if (
-                self.mode == Mode.LLM42
-                and r.sampling.is_deterministic
-                and len(r.candidates) >= max_cand
-            ):
-                continue  # window full; waiting for verification
-            out.append(r)
-        return out
-
-    def _verify_ready(self) -> List[Request]:
-        if self.mode != Mode.LLM42:
-            return []
-        return [r for r in self.running if dvr.ready_for_verify(r, self.window)]
+    def _view(self) -> sched.SchedulerView:
+        """Snapshot handed to the schedule policy each iteration."""
+        return sched.SchedulerView(
+            running=tuple(self.running),
+            mode=self.mode,
+            window=self.window,
+            group=self.group,
+            # recurrent state advances irreversibly: no speculating past a
+            # submitted window on ssm/hybrid archs (scheduler.py docstring)
+            speculate_past_inflight=not self.needs_ckpt,
+            now=self._now,
+            verify_latency=self.verify_latency,
+        )
 
     # ------------------------------------------------------------------
     # steps
     # ------------------------------------------------------------------
 
-    def _decode_step(self, batch: List[Request]) -> None:
+    def _decode_step(self, batch: List[Request]) -> Dict[str, Any]:
         B = len(batch)
         if self.mode == Mode.BATCH_INVARIANT:
             schedule = INVARIANT_SCHEDULE
@@ -316,7 +321,8 @@ class Engine:
         slots = jnp.array([r.slot for r in batch], jnp.int32)
         last_tok, pos, out_pos, seeds, temps, top_ks = [], [], [], [], [], []
         for r in batch:
-            seq = r.committed + r.candidates
+            # speculation order: committed, in-flight window, fresh candidates
+            seq = r.committed + r.speculation
             last_tok.append(seq[-1])
             prefix = getattr(r, "_prefix_len", 0)
             pos.append(r.prompt_len + prefix + len(seq) - 1)
@@ -338,12 +344,27 @@ class Engine:
                 r.candidates.append(t)
             else:
                 r.committed.append(t)
-        self.events.append({
+        return {
             "kind": "decode", "batch": B, "schedule": tuple(schedule),
             "ctx_sum": sum(pos) + B, "wall": wall, "iter": self._now,
-        })
+            "rids": [r.rid for r in batch],
+        }
 
-    def _verify_step(self, group: List[Request]) -> None:
+    def _verify_step(
+        self, group: List[Request], *, defer: bool = False,
+        n_decodable: int = 0,
+    ) -> Dict[str, Any]:
+        """Run one grouped verification pass.
+
+        ``defer=False`` (pause policy): the verdict is applied synchronously,
+        exactly the seed behaviour.  ``defer=True`` (overlap policy): the
+        submitted candidates move to per-request in-flight state and the
+        verdict lands at the start of an iteration ``verify_latency`` steps
+        later — the device pass still executes eagerly (host-sequential
+        simulation of an async verify stream), so its KV/state repair is in
+        place before any later cache read, but the *protocol* result
+        arrives with the modeled latency.
+        """
         G, W = self.group, self.window
         rows = group[:G]
         n_pad = G - len(rows)
@@ -386,20 +407,33 @@ class Engine:
         wall = time.perf_counter() - t0
         n_match = [int(n) for n in n_match]
         commit_tok = [int(t) for t in commit_tok]
-        for r, n, t in zip(rows, n_match, commit_tok):
-            dvr.apply_verify_result(r, n, t)
-        self.events.append({
+        if defer:
+            # verdict usable at the START of iteration now + latency
+            ready_iter = self._now + self.verify_latency
+            for r, n, t in zip(rows, n_match, commit_tok):
+                fl = dvr.begin_inflight(r, W, self._now, ready_iter)
+                fl.n_match, fl.commit_tok = n, t
+        else:
+            for r, n, t in zip(rows, n_match, commit_tok):
+                dvr.apply_verify_result(r, n, t)
+        return {
             "kind": "verify", "group": len(rows), "window": W, "pad_rows": n_pad,
             "ctx_sum": sum(starts) + W * G, "wall": wall, "iter": self._now,
-        })
+            # requests that could decode this iteration — under the pause
+            # policy these are the requests the verify pass stalls; under
+            # overlap they ride in the composite event's decode batch
+            "rids": [r.rid for r in rows], "n_decodable": n_decodable,
+        }
 
     def _retire(self) -> None:
         done = [r for r in self.running if r.finished() or (
             not r.sampling.is_deterministic and r.done_decoding()
         ) or (self.mode != Mode.LLM42 and r.done_decoding())]
         for r in done:
-            # a det request must have no outstanding candidates at retirement
-            if self.mode == Mode.LLM42 and r.sampling.is_deterministic and r.candidates:
+            # a det request must have no outstanding speculation at retirement
+            if self.mode == Mode.LLM42 and r.sampling.is_deterministic and (
+                r.candidates or r.inflight is not None
+            ):
                 continue
             r.state = State.FINISHED
             r.finish_time = self._now
@@ -413,27 +447,61 @@ class Engine:
     # ------------------------------------------------------------------
 
     def step(self) -> bool:
-        """One scheduler iteration.  Returns False when fully drained."""
+        """One scheduler iteration.  Returns False when fully drained.
+
+        Order within an iteration: land due verdicts, plan, DECODE, then
+        VERIFY launch.  Decode-before-verify is a correctness requirement,
+        not taste: the decode of a row being submitted this iteration
+        re-feeds its last candidate, writing fast-path KV at the window's
+        final position — a position the verify replay is about to repair
+        and that no later replay will ever cover again.  Launching the
+        verify afterwards lets its repair win; every later speculative
+        write lands at positions >= the next window start, which the next
+        replay rewrites.  An iteration that ran both passes emits a single
+        composite ``overlap`` event so the cost model can charge them as
+        concurrent (``costmodel.step_time``)."""
         self._now += 1
         self._retire()
         self._admit()
         if not self.running and not self.queue:
             return False
 
-        ready = self._verify_ready()
-        decodable = self._decodable()
-        # verify when a full group is ready, or when decoding is blocked
-        if ready and (len(ready) >= self.group or not decodable):
-            self._verify_step(ready)
-            return True
-        if decodable:
-            self._decode_step(decodable)
-            return True
-        # nothing decodable and nothing to verify: drain stragglers
-        if ready:
-            self._verify_step(ready)
+        applied = self._apply_due_verdicts()
+        view = self._view()
+        plan = self.scheduler.plan(view)
+        vev = dev = None
+        if plan.decode:
+            batch = [r for r in plan.decode if not r.done_decoding()]
+            if batch:
+                dev = self._decode_step(batch)
+        if plan.verify:
+            vev = self._verify_step(
+                plan.verify, defer=self.scheduler.defers_verify,
+                n_decodable=len(sched.decodable(view)),
+            )
+
+        if vev is not None and dev is not None:
+            self.events.append({
+                "kind": "overlap", "decode": dev, "verify": vev,
+                "wall": dev["wall"] + vev["wall"], "iter": self._now,
+            })
+        elif vev is not None:
+            self.events.append(vev)
+        elif dev is not None:
+            self.events.append(dev)
+        if vev is not None or dev is not None or applied:
             return True
         return bool(self.running or self.queue)
+
+    def _apply_due_verdicts(self) -> bool:
+        """Land in-flight verify results whose modeled latency has elapsed."""
+        applied = False
+        for r in self.running:
+            fl = r.inflight
+            if fl is not None and fl.n_match >= 0 and fl.ready_iter <= self._now:
+                dvr.apply_inflight_result(r)
+                applied = True
+        return applied
 
     def run(self, max_iters: int = 100000) -> List[Request]:
         for _ in range(max_iters):

@@ -14,7 +14,7 @@ from a sentinel-sized spec.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, List
 
 import jax
 import jax.numpy as jnp

@@ -5,12 +5,17 @@ simulated clock by the cost model's per-step time — the standard
 discrete-event approach for evaluating serving schedulers without the
 target hardware.  Produces per-request end-to-end latency and TTFT
 (paper Fig. 11 / Table 5).
+
+Overlapped iterations (``OverlapPolicy``) arrive as composite ``overlap``
+events; ``costmodel.step_time`` charges them as concurrent (max + a
+contention term), so the clock advances by less than the pause policy's
+decode-then-verify sum — the latency benefit shows up here directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.models.base import ModelConfig
 from repro.serving import costmodel

@@ -21,6 +21,24 @@ class State(enum.Enum):
 
 
 @dataclasses.dataclass
+class InflightVerify:
+    """A verification window submitted to the device but not yet applied.
+
+    The scheduler's ``OverlapPolicy`` lets a request keep speculating while
+    one of these is outstanding; ``core.dvr`` owns the splice/rollback
+    semantics.  ``n_match``/``commit_tok`` are filled in when the device
+    pass completes (< 0 means still pending from the protocol's view — the
+    discrete-event engine computes them eagerly but *applies* them at
+    ``ready_iter`` to model verification latency)."""
+
+    cands: List[int]
+    submitted_iter: int
+    ready_iter: int
+    n_match: int = -1
+    commit_tok: int = -1
+
+
+@dataclasses.dataclass
 class SamplingParams:
     temperature: float = 0.0  # 0 => greedy (argmax, first-max tiebreak)
     top_k: int = 0  # 0 => no truncation; deterministic for fixed k
@@ -42,6 +60,8 @@ class Request:
     slot: int = -1
     committed: List[int] = dataclasses.field(default_factory=list)
     candidates: List[int] = dataclasses.field(default_factory=list)
+    # window submitted for verification while decoding continues (OverlapPolicy)
+    inflight: Optional[InflightVerify] = None
     # stats
     num_rollbacks: int = 0
     num_recomputed_tokens: int = 0
@@ -62,16 +82,27 @@ class Request:
         return len(self.committed)
 
     @property
+    def inflight_cands(self) -> List[int]:
+        return self.inflight.cands if self.inflight is not None else []
+
+    @property
+    def speculation(self) -> List[int]:
+        """All uncommitted tokens in sequence order (in-flight window first)."""
+        return self.inflight_cands + self.candidates
+
+    @property
     def total_generated(self) -> int:
-        return len(self.committed) + len(self.candidates)
+        return len(self.committed) + len(self.inflight_cands) + len(self.candidates)
 
     def done_decoding(self) -> bool:
-        """All tokens generated (committed + candidates reach the budget)."""
+        """All tokens generated (committed + speculation reach the budget)."""
         if self.total_generated >= self.sampling.max_new_tokens:
             return True
         eos = self.sampling.eos_id
         if eos is not None and (
-            eos in self.committed or eos in self.candidates
+            eos in self.committed
+            or eos in self.candidates
+            or eos in self.inflight_cands
         ):
             return True
         return False

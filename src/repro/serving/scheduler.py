@@ -1,0 +1,181 @@
+"""Scheduler subsystem: per-iteration verify/decode co-scheduling policies.
+
+The paper's prototype pauses *all* decoding whenever a verification pass
+runs (§5.2 limitation (1)) — a handful of deterministic requests stalls the
+whole non-deterministic fast path.  This module makes that choice pluggable:
+
+* ``PauseDecodePolicy`` — the prototype's behaviour, verbatim: an iteration
+  is either one verify pass or one decode batch, never both.  Kept as the
+  reference policy (and for A/B ablation in ``benchmarks/fig_overlap.py``).
+* ``OverlapPolicy``      — the default for ``Mode.LLM42``: a verify group is
+  launched *alongside* the same iteration's decode batch.  Non-deterministic
+  requests never idle behind verification, and (on attention-only archs) a
+  deterministic request keeps speculating past a window that is already in
+  flight — ``core.dvr.begin_inflight`` / ``apply_inflight_result`` own the
+  splice/rollback bookkeeping.
+
+A policy is a pure function from a :class:`SchedulerView` (what is
+decodable, what is ready to verify) to a :class:`Plan` (what this iteration
+runs).  It decides *scheduling*, never token semantics — the committed
+stream of a deterministic request is the verifier's reference sequence by
+construction, so it is bitwise identical across policies, arrival orders
+and co-batched traffic.  ``tests/test_scheduler.py`` asserts exactly that.
+
+Recurrent/hybrid archs (``ssm``/``hybrid`` families) cap speculation at one
+window: their fast path advances state irreversibly, so speculating past a
+submitted window would decode from a state the verifier is about to
+replace.  Overlap still applies to *other* requests' decoding — the pause
+the tentpole removes.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List
+
+from repro.core import dvr
+from repro.core.determinism import Mode
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerView:
+    """Immutable snapshot the engine hands a policy each iteration."""
+
+    running: tuple  # all RUNNING requests, admission order
+    mode: Mode
+    window: int
+    group: int
+    #: False for ssm/hybrid archs: no speculation past an in-flight window
+    speculate_past_inflight: bool
+    now: int  # logical iteration counter
+    #: iterations until a launched verdict lands (Engine.verify_latency);
+    #: at 1, verdicts land before the same iteration's decode batch runs
+    verify_latency: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """What one engine iteration executes.  ``verify`` non-empty launches a
+    grouped verification pass; ``decode`` non-empty runs a decode batch.
+    Both non-empty == an overlapped iteration (costed as concurrent by the
+    cost model)."""
+
+    decode: List[Request] = dataclasses.field(default_factory=list)
+    verify: List[Request] = dataclasses.field(default_factory=list)
+
+    @property
+    def overlapped(self) -> bool:
+        return bool(self.decode) and bool(self.verify)
+
+    @property
+    def empty(self) -> bool:
+        return not self.decode and not self.verify
+
+
+def decodable(view: SchedulerView) -> List[Request]:
+    """Requests that can take a fast-path decode token this iteration."""
+    out = []
+    max_cand = dvr.candidates_per_window(view.window)
+    for r in view.running:
+        if r.done_decoding():
+            continue
+        if view.mode == Mode.LLM42 and r.sampling.is_deterministic:
+            if len(r.candidates) >= max_cand:
+                continue  # current window full; awaiting (or in) verification
+            if r.inflight is not None and not view.speculate_past_inflight:
+                continue  # recurrent state: no speculation past the window
+        out.append(r)
+    return out
+
+
+def verify_ready(view: SchedulerView) -> List[Request]:
+    if view.mode != Mode.LLM42:
+        return []
+    return [r for r in view.running if dvr.ready_for_verify(r, view.window)]
+
+
+class SchedulePolicy(abc.ABC):
+    """Maps a scheduler view to this iteration's plan."""
+
+    name: str = "abstract"
+    #: True => verify verdicts go through per-request in-flight state and
+    #: land ``Engine.verify_latency`` iterations after launch; False => the
+    #: verdict is applied synchronously inside the verify pass (seed flow).
+    defers_verify: bool = False
+
+    @abc.abstractmethod
+    def plan(self, view: SchedulerView) -> Plan:
+        ...
+
+
+class PauseDecodePolicy(SchedulePolicy):
+    """Paper-prototype scheduling: verification pauses decoding.
+
+    Verify when a full group is ready or when nothing can decode; otherwise
+    decode.  One device pass per iteration — the §5.2 limitation (1)
+    behaviour the seed engine shipped with."""
+
+    name = "pause_decode"
+
+    def plan(self, view: SchedulerView) -> Plan:
+        ready = verify_ready(view)
+        dec = decodable(view)
+        if ready and (len(ready) >= view.group or not dec):
+            return Plan(verify=ready)
+        if dec:
+            return Plan(decode=dec)
+        if ready:  # drain stragglers
+            return Plan(verify=ready)
+        return Plan()
+
+
+class OverlapPolicy(SchedulePolicy):
+    """Co-schedule a verify group alongside the iteration's decode batch.
+
+    The decode batch always contains every decodable request — verification
+    never idles the fast path.  Verify groups are launched group-aware: a
+    fixed-shape (G, W) pass costs the same however few rows are real, so a
+    partial group waits while other deterministic windows are still filling
+    (they will pool into a fuller pass) and launches once no more can join —
+    or once nothing can decode, where holding would stall the iteration.
+    Holding is not free for the HELD rows: their window is full, so they
+    neither decode nor verify until the group launches (the same wait
+    pause-decode's full-group gate imposes); what the policy never trades
+    away is the progress of everything else in the batch."""
+
+    name = "overlap"
+    defers_verify = True
+
+    def plan(self, view: SchedulerView) -> Plan:
+        ready = verify_ready(view)
+        dec = decodable(view)
+        if ready and len(ready) < view.group and dec:
+            ready_set = set(id(r) for r in ready)
+            may_join = any(
+                r.sampling.is_deterministic
+                and id(r) not in ready_set
+                and (r.inflight is not None or not r.done_decoding())
+                for r in view.running
+            )
+            if may_join:
+                ready = []
+        if ready and view.speculate_past_inflight:
+            # the rows being submitted (the engine takes the first `group`)
+            # decode in this very iteration too — their first token past
+            # the window rides the launch quantum instead of costing an
+            # iteration of their own.  The engine decodes BEFORE launching
+            # the verify, so the window's KV repair still wins (engine.step
+            # docstring); excluded on recurrent archs like any other
+            # past-window speculation
+            for r in ready[: view.group]:
+                if not r.done_decoding():
+                    dec.append(r)
+        return Plan(decode=dec, verify=ready)
+
+
+def default_policy(mode: Mode) -> SchedulePolicy:
+    """LLM42 overlaps by default; other modes never verify, so the pause
+    policy's decode-only branch is all they use."""
+    return OverlapPolicy() if mode == Mode.LLM42 else PauseDecodePolicy()

@@ -7,7 +7,6 @@ in_shardings on restore.  Step metadata travels in the archive.
 
 from __future__ import annotations
 
-import io
 import os
 from typing import Any, Dict, Tuple
 

@@ -11,7 +11,6 @@ dry-run's memory analysis sane (DESIGN.md §5).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

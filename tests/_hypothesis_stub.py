@@ -1,0 +1,81 @@
+"""Minimal deterministic fallback for ``hypothesis`` (used when the real
+package is not installed, e.g. in the hermetic CPU container).
+
+Only the subset this suite uses is provided: ``given``, ``settings`` and the
+``strategies`` namespace with ``integers``, ``sampled_from`` and
+``booleans``.  Examples are drawn from a fixed-seed RNG, so a run is fully
+reproducible — this trades hypothesis' shrinking/coverage machinery for a
+plain deterministic parameter sweep.  CI installs the real package via the
+``[test]`` extra and never touches this module.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, Sequence
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements: Sequence[Any]) -> _Strategy:
+    items = list(elements)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+
+strategies = SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, booleans=booleans
+)
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored) -> Callable:
+    """Decorator recording ``max_examples``; other knobs are ignored."""
+
+    def deco(fn: Callable) -> Callable:
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies: _Strategy) -> Callable:
+    """Run the test once per drawn example (fixed seed => reproducible)."""
+
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {
+                    name: s.example_from(rng)
+                    for name, s in named_strategies.items()
+                }
+                fn(*args, **kwargs, **drawn)
+
+        # hide strategy-supplied params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        kept = [p for n, p in sig.parameters.items() if n not in named_strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__  # signature() must not follow back to fn
+        return wrapper
+
+    return deco

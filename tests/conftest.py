@@ -1,3 +1,5 @@
+import sys
+
 import jax
 import numpy as np
 import pytest
@@ -5,6 +7,24 @@ import pytest
 # Tests run on the single real CPU device; only launch/dryrun.py (run as a
 # separate process) uses the 512-device simulation.  Keep f32 exactness.
 jax.config.update("jax_enable_x64", False)
+
+# Property tests import hypothesis; the hermetic container doesn't ship it.
+# Install the deterministic fallback before test modules are collected (CI
+# installs the real package via the [test] extra, so this is a no-op there).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+    import os
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"),
+    )
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
 
 
 @pytest.fixture(scope="session")

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dvr
@@ -72,6 +71,86 @@ class TestDVRBookkeeping:
         assert dvr.ready_for_verify(r3, window=5)
         r4 = _req([10], [20, 30, 40, 50], det=False)
         assert not dvr.ready_for_verify(r4, window=5)
+
+
+class TestInflightVerify:
+    """In-flight window bookkeeping (scheduler OverlapPolicy support)."""
+
+    def _submit(self, committed, window_cands, past, window=5):
+        r = _req(committed, list(window_cands) + list(past))
+        fl = dvr.begin_inflight(r, window=window, submitted_iter=1,
+                                ready_iter=1)
+        assert fl.cands == list(window_cands)
+        assert r.candidates == list(past)
+        return r
+
+    def test_begin_inflight_moves_window_out(self):
+        r = self._submit([10], [20, 30, 40, 50], [60, 61])
+        # window is out for verification; speculation continues behind it
+        assert r.inflight.cands == [20, 30, 40, 50]
+        assert r.total_generated == 1 + 4 + 2
+        assert not dvr.ready_for_verify(r, window=5)  # no double-submit
+
+    def test_full_match_agreeing_tail_survives(self):
+        """Full match + commit token == first speculated-past token: the
+        continuation was conditioned on exactly what got committed, so the
+        remaining speculation stays valid."""
+        r = self._submit([10], [20, 30, 40, 50], [60, 61])
+        r.inflight.n_match, r.inflight.commit_tok = 4, 60
+        dvr.apply_inflight_result(r)
+        assert r.committed == [10, 20, 30, 40, 50, 60]
+        assert r.candidates == [61]  # 60 was subsumed by the commit
+        assert r.inflight is None
+        assert r.num_rollbacks == 0
+
+    def test_full_match_disagreeing_tail_invalidated(self):
+        """Full match but the verifier's next token differs from the first
+        speculated-past token: everything decoded past the window descends
+        from a rolled-back token and must be recomputed."""
+        r = self._submit([10], [20, 30, 40, 50], [60, 61, 62])
+        r.inflight.n_match, r.inflight.commit_tok = 4, 99
+        dvr.apply_inflight_result(r)
+        assert r.committed == [10, 20, 30, 40, 50, 99]
+        assert r.candidates == []
+        assert r.num_rollbacks == 1
+        assert r.num_recomputed_tokens == 3  # 60, 61, 62
+
+    def test_window_mismatch_invalidates_past_speculation(self):
+        """Rollback inside the window reaches THROUGH to the speculated-past
+        tokens: they extend a rejected candidate."""
+        r = self._submit([10], [20, 30, 40, 50], [60, 61])
+        r.inflight.n_match, r.inflight.commit_tok = 1, 77
+        dvr.apply_inflight_result(r)
+        assert r.committed == [10, 20, 77]
+        assert r.candidates == []
+        assert r.num_rollbacks == 1
+        # 30, 40, 50 rejected in-window + 60, 61 speculated past it
+        assert r.num_recomputed_tokens == 5
+
+    def test_no_tail_full_match(self):
+        r = self._submit([10], [20, 30], [])
+        r.inflight.n_match, r.inflight.commit_tok = 2, 44
+        dvr.apply_inflight_result(r)
+        assert r.committed == [10, 20, 30, 44]
+        assert r.num_rollbacks == 0
+
+    def test_budget_clamp_drops_tail(self):
+        r = self._submit([10], [20, 30, 40, 50], [60, 61], window=5)
+        r.sampling.max_new_tokens = 6
+        r.inflight.n_match, r.inflight.commit_tok = 4, 60
+        dvr.apply_inflight_result(r)
+        assert len(r.committed) == 6
+        assert r.candidates == []  # budget reached: speculation moot
+
+    def test_progress_invariant_inflight(self):
+        for n_match in range(5):
+            for past in ([], [60], [60, 61]):
+                r = self._submit([1], [20, 30, 40, 50], past)
+                r.inflight.n_match, r.inflight.commit_tok = n_match, 5
+                before = len(r.committed)
+                dvr.apply_inflight_result(r)
+                assert len(r.committed) >= before + 1
+                assert r.inflight is None
 
 
 class TestSampler:

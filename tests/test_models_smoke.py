@@ -25,6 +25,10 @@ from repro.models.multimodal import audio_frames
 from repro.training.optimizer import AdamWConfig, init_opt_state
 from repro.training.train import make_train_step
 
+# full model-zoo sweep: ~10 archs x (forward + train + cache consistency)
+# compiles dozens of XLA programs — minutes on CPU, hence tier-2
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 B, S = 2, 16
 

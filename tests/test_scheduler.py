@@ -1,0 +1,233 @@
+"""Scheduler subsystem tests: policy plumbing, the no-idle guarantee, and
+the headline invariant — committed token streams for deterministic requests
+are bitwise identical across scheduler policies and arrival interleavings.
+"""
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.determinism import Mode, ReductionPolicy
+from repro.models import init_params
+from repro.serving import scheduler as sched
+from repro.serving.costmodel import flatten_events
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams
+from repro.serving.scheduler import (
+    OverlapPolicy,
+    PauseDecodePolicy,
+    Plan,
+    SchedulerView,
+    default_policy,
+)
+
+#: aggressive drift so rollbacks actually happen at toy scale
+DRIFTY = ReductionPolicy(
+    thresholds=((2, 16), (4, 8), (16, 4)), combine_dtype="bfloat16"
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("llama3-8b")
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _reqs(cfg, rids, det_rids, max_new=18):
+    return [
+        Request(
+            rid=i, prompt=[(5 * i + j) % cfg.vocab_size for j in range(9)],
+            sampling=SamplingParams(
+                max_new_tokens=max_new, is_deterministic=(i in det_rids),
+                seed=70 + i,
+            ),
+        )
+        for i in rids
+    ]
+
+
+def _run(cfg, params, requests, *, scheduler, window=5, group=2, **kw):
+    eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=window,
+                 group=group, max_batch=8, capacity=256, scheduler=scheduler,
+                 **kw)
+    for r in requests:
+        eng.submit(r)
+    done = {r.rid: r for r in eng.run()}
+    return done, eng
+
+
+# ----------------------------------------------------------------------
+# pure policy logic (no model)
+# ----------------------------------------------------------------------
+
+
+def _fake_req(rid, *, det=True, committed=1, cands=0, max_new=100,
+              inflight=False):
+    r = Request(rid=rid, prompt=[1, 2, 3],
+                sampling=SamplingParams(max_new_tokens=max_new,
+                                        is_deterministic=det))
+    r.committed = list(range(100, 100 + committed))
+    r.candidates = list(range(200, 200 + cands))
+    if inflight:
+        from repro.serving.request import InflightVerify
+
+        r.inflight = InflightVerify(cands=[7, 8], submitted_iter=0,
+                                    ready_iter=2)
+    return r
+
+
+def _view(running, *, window=5, group=2, speculate=True):
+    return SchedulerView(
+        running=tuple(running), mode=Mode.LLM42, window=window, group=group,
+        speculate_past_inflight=speculate, now=1,
+    )
+
+
+class TestPolicyPlans:
+    def test_pause_is_exclusive(self):
+        """PauseDecodePolicy never co-schedules: one pass per iteration."""
+        ready = _fake_req(0, cands=4)  # full window for W=5
+        nondet = _fake_req(1, det=False)
+        plan = PauseDecodePolicy().plan(_view([ready, nondet]))
+        # group not full, decoding possible -> decode only
+        assert plan.decode and not plan.verify
+        ready2 = _fake_req(2, cands=4)
+        plan2 = PauseDecodePolicy().plan(_view([ready, ready2, nondet]))
+        # full group -> verify only; the nondet request idles (limitation (1))
+        assert plan2.verify and not plan2.decode
+
+    def test_overlap_coschedules(self):
+        """OverlapPolicy: the verify group rides alongside the decode batch —
+        decodable requests are NEVER dropped to make room for verification."""
+        ready = [_fake_req(0, cands=4), _fake_req(1, cands=4)]
+        nondet = [_fake_req(2, det=False), _fake_req(3, det=False)]
+        plan = OverlapPolicy().plan(_view(ready + nondet))
+        assert plan.overlapped
+        # nondets ride the batch; the submitted rows join it too (their
+        # first past-window token shares the launch quantum)
+        assert set(r.rid for r in plan.decode) == {0, 1, 2, 3}
+        assert set(r.rid for r in plan.verify) == {0, 1}
+        # on recurrent archs the submitted rows must NOT speculate
+        plan2 = OverlapPolicy().plan(_view(ready + nondet, speculate=False))
+        assert set(r.rid for r in plan2.decode) == {2, 3}
+
+    def test_overlap_launches_partial_groups(self):
+        plan = OverlapPolicy().plan(
+            _view([_fake_req(0, cands=4), _fake_req(1, det=False)])
+        )
+        assert plan.verify and plan.decode
+
+    def test_inflight_request_keeps_decoding(self):
+        r = _fake_req(0, cands=1, inflight=True)
+        assert r in sched.decodable(_view([r]))
+        # …but not on recurrent archs (irreversible state)
+        assert r not in sched.decodable(_view([r], speculate=False))
+        # and it cannot be submitted again while the window is outstanding
+        assert r not in sched.verify_ready(_view([r]))
+
+    def test_default_policy_per_mode(self):
+        assert isinstance(default_policy(Mode.LLM42), OverlapPolicy)
+        assert isinstance(default_policy(Mode.NONDET), PauseDecodePolicy)
+        assert isinstance(default_policy(Mode.BATCH_INVARIANT),
+                          PauseDecodePolicy)
+
+    def test_plan_flags(self):
+        assert Plan().empty
+        assert not Plan(decode=[_fake_req(0)]).overlapped
+        assert Plan(decode=[_fake_req(0)], verify=[_fake_req(1)]).overlapped
+
+
+# ----------------------------------------------------------------------
+# engine integration: determinism across policies / arrival orders
+# ----------------------------------------------------------------------
+
+
+class TestCrossPolicyDeterminism:
+    def test_policies_and_interleavings_agree_bitwise(self, model):
+        """The repo's whole point: committed streams of deterministic
+        requests are bitwise identical under PauseDecodePolicy,
+        OverlapPolicy, and different arrival interleavings."""
+        cfg, params = model
+        det = {0, 2}
+        runs = []
+        for scheduler, order in [
+            (PauseDecodePolicy(), [0, 1, 2, 3]),
+            (OverlapPolicy(), [0, 1, 2, 3]),
+            (PauseDecodePolicy(), [3, 2, 1, 0]),
+            (OverlapPolicy(), [2, 0, 3, 1]),
+        ]:
+            done, _ = _run(cfg, params, _reqs(cfg, order, det),
+                           scheduler=scheduler)
+            runs.append({rid: done[rid].committed for rid in det})
+        for other in runs[1:]:
+            assert other == runs[0]
+
+    def test_overlap_with_larger_verify_latency(self, model):
+        """A slower (more async) verifier means deeper speculation past the
+        window — the committed stream must not move."""
+        cfg, params = model
+        det = {0}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2], det),
+                       scheduler=PauseDecodePolicy())
+        for latency in (1, 2, 3):
+            got, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2], det),
+                          scheduler=OverlapPolicy(), verify_latency=latency)
+            assert got[0].committed == base[0].committed, latency
+
+    def test_stochastic_sampling_unaffected_by_policy(self, model):
+        cfg, params = model
+        reqs = _reqs(cfg, [0, 1, 2, 3], {0, 1}, max_new=14)
+        for r in reqs:
+            r.sampling.temperature = 0.8
+        a, _ = _run(cfg, params, reqs, scheduler=PauseDecodePolicy())
+        reqs2 = _reqs(cfg, [0, 1, 2, 3], {0, 1}, max_new=14)
+        for r in reqs2:
+            r.sampling.temperature = 0.8
+        b, _ = _run(cfg, params, reqs2, scheduler=OverlapPolicy())
+        assert a[0].committed == b[0].committed
+        assert a[1].committed == b[1].committed
+
+
+class TestNoIdleGuarantee:
+    def test_verify_never_idles_decodable_requests(self, model):
+        """Acceptance criterion: under OverlapPolicy, every verify pass that
+        launches while anything is decodable is co-scheduled with that
+        decode batch (event log shows no standalone verify with co-decodable
+        requests), and overlapped iterations actually occur."""
+        cfg, params = model
+        done, eng = _run(cfg, params, _reqs(cfg, range(6), {0, 1, 2}),
+                         scheduler=OverlapPolicy(), group=3)
+        assert any(e["kind"] == "overlap" for e in eng.events)
+        for ev in eng.events:
+            if ev["kind"] == "verify":  # standalone verify iteration
+                assert ev["n_decodable"] == 0, (
+                    "verify pass idled a decodable request"
+                )
+            if ev["kind"] == "overlap":
+                # every decodable request rode the batch; submitted rows may
+                # join on top (they resume speculating in the launch quantum)
+                assert ev["decode"]["batch"] >= ev["verify"]["n_decodable"]
+
+    def test_pause_policy_does_idle(self, model):
+        """Sanity check of the ablation: the seed policy DOES stall the fast
+        path (otherwise the tentpole is vacuous)."""
+        cfg, params = model
+        done, eng = _run(cfg, params, _reqs(cfg, range(6), {0, 1, 2}),
+                         scheduler=PauseDecodePolicy(), group=3)
+        assert not any(e["kind"] == "overlap" for e in eng.events)
+        stalled = [
+            ev for ev in eng.events
+            if ev["kind"] == "verify" and ev["n_decodable"] > 0
+        ]
+        assert stalled, "pause policy never stalled a decodable request"
+
+    def test_event_log_flattening(self, model):
+        cfg, params = model
+        _, eng = _run(cfg, params, _reqs(cfg, [0, 1], {0}),
+                      scheduler=OverlapPolicy())
+        flat = flatten_events(eng.events)
+        assert not any(e["kind"] == "overlap" for e in flat)
+        n_leaf = sum(
+            2 if e["kind"] == "overlap" else 1 for e in eng.events
+        )
+        assert len(flat) == n_leaf

@@ -22,7 +22,6 @@ from repro.training.data import (
 from repro.training.optimizer import (
     AdamWConfig,
     apply_updates,
-    global_norm,
     init_opt_state,
     lr_at,
 )
