@@ -49,12 +49,14 @@ def full_config(arch: str = BENCH_ARCH):
 def make_requests(
     cfg, n: int, det_ratio: float, max_new: int, in_len: int = 12,
     seed: int = 0, out_lens: Optional[Sequence[int]] = None,
+    in_lens: Optional[Sequence[int]] = None,
 ) -> List[Request]:
     rng = np.random.default_rng(seed)
     det_flags = rng.random(n) < det_ratio
     reqs = []
     for i in range(n):
-        prompt = rng.integers(0, cfg.vocab_size, in_len).tolist()
+        il = in_lens[i] if in_lens is not None else in_len
+        prompt = rng.integers(0, cfg.vocab_size, il).tolist()
         ol = out_lens[i] if out_lens is not None else max_new
         reqs.append(Request(
             rid=i, prompt=prompt,
@@ -70,10 +72,11 @@ def run_scenario(
     cfg, params, requests: List[Request], *, mode: Mode = Mode.LLM42,
     window: int = 8, group: int = 4, max_batch: int = 8, capacity: int = 256,
     policy: ReductionPolicy = BENCH_POLICY, scheduler=None,
+    prefill_chunk: int = 0,
 ) -> Dict:
     eng = Engine(cfg, params, mode=mode, policy=policy, window=window,
                  group=group, max_batch=max_batch, capacity=capacity,
-                 scheduler=scheduler)
+                 scheduler=scheduler, prefill_chunk=prefill_chunk)
     for r in requests:
         eng.submit(r)
     t0 = time.time()

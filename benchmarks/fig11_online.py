@@ -20,11 +20,13 @@ from benchmarks.common import (
 from repro.training.data import poisson_arrivals
 
 
-def _run(cfg, params, fcfg, n, qps, det_ratio, mode, seed=0, scheduler=None):
+def _run(cfg, params, fcfg, n, qps, det_ratio, mode, seed=0, scheduler=None,
+         prefill_chunk=0, in_lens=None, capacity=256):
     engine = Engine(cfg, params, mode=mode, policy=BENCH_POLICY,
-                    window=8, group=4, max_batch=8, capacity=256,
-                    scheduler=scheduler)
-    reqs = make_requests(cfg, n, det_ratio, max_new=24, seed=seed)
+                    window=8, group=4, max_batch=8, capacity=capacity,
+                    scheduler=scheduler, prefill_chunk=prefill_chunk)
+    reqs = make_requests(cfg, n, det_ratio, max_new=24, seed=seed,
+                         in_lens=in_lens)
     arrivals = poisson_arrivals(n, qps, seed=seed)
     res = run_online(engine, fcfg, list(zip(reqs, arrivals)),
                      invariant_mode=(mode == Mode.BATCH_INVARIANT))
@@ -67,4 +69,22 @@ def run(n: int = 24, qps: float = 40.0):
               scheduler=OverlapPolicy())
     rows.append(("fig11_llm42_50pct_pause_p99_ms", "", round(pa["p99"] * 1e3, 1)))
     rows.append(("fig11_llm42_50pct_overlap_p99_ms", "", round(ov["p99"] * 1e3, 1)))
+
+    # chunked-prefill ablation (§5.2 limitation (2)): every 4th prompt is
+    # long; exclusive prefill stalls co-resident decode traffic for the
+    # whole prompt, the chunked lane amortizes it chunk by chunk.  TTFT p50
+    # is the short-prompt traffic (the stall victims) and improves; TTFT
+    # p90 is the long prompts themselves, which pay for their chunking —
+    # the cost lands on the traffic that causes it (see
+    # benchmarks/fig_prefill.py for the dedicated TTFT study)
+    long_lens = [512 if i % 4 == 0 else 12 for i in range(n)]
+    for chunk, tag in ((0, "exclusive"), (128, "chunked128")):
+        r = _run(cfg, params, fcfg, n, qps, 0.5, Mode.LLM42,
+                 prefill_chunk=chunk, in_lens=long_lens, capacity=1024)
+        rows.append((f"fig11_llm42_longprompt_{tag}_ttft_p50_ms", "",
+                     round(r["ttft_p50"] * 1e3, 2)))
+        rows.append((f"fig11_llm42_longprompt_{tag}_ttft_p90_ms", "",
+                     round(r["ttft_p90"] * 1e3, 2)))
+        rows.append((f"fig11_llm42_longprompt_{tag}_p99_ms", "",
+                     round(r["p99"] * 1e3, 1)))
     return rows

@@ -26,6 +26,7 @@ def main() -> None:
         fig11_online,
         fig12_grouped,
         fig_overlap,
+        fig_prefill,
     )
 
     suites = [
@@ -37,6 +38,7 @@ def main() -> None:
         ("fig11+table5", fig11_online.run),
         ("fig12", fig12_grouped.run),
         ("fig_overlap", fig_overlap.run),
+        ("fig_prefill", fig_prefill.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

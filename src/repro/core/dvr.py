@@ -52,6 +52,19 @@ def ready_for_verify(req: Request, window: int) -> bool:
     )
 
 
+def mark_window_state(req: Request, window: int) -> None:
+    """Truthful ``State`` bookkeeping after a fast-path candidate lands: a
+    deterministic request whose candidate window is full — or whose output
+    budget is already covered by outstanding speculation — cannot take
+    another fast-path token and is awaiting verification."""
+    if req.state is State.FINISHED:
+        return
+    if len(req.candidates) >= candidates_per_window(window) or (
+        req.candidates and req.done_decoding()
+    ):
+        req.state = State.AWAITING_VERIFY
+
+
 def build_verify_row(
     req: Request, window: int, pad_token: int = 0
 ) -> Tuple[List[int], List[int], int, int, int]:
@@ -70,7 +83,9 @@ def build_verify_row(
     return inputs, cand_padded, cand_len, start_pos, out_base
 
 
-def apply_verify_result(req: Request, n_match: int, commit_tok: int) -> None:
+def apply_verify_result(
+    req: Request, n_match: int, commit_tok: int, window: int = 0
+) -> None:
     """Commit matching prefix + the verifier token; roll back the rest."""
     cand_len = len(req.candidates)
     n_match = min(n_match, cand_len)
@@ -86,6 +101,10 @@ def apply_verify_result(req: Request, n_match: int, commit_tok: int) -> None:
         req.num_recomputed_tokens += rejected
 
     _clamp_budget(req)
+    if req.state is not State.FINISHED:
+        req.state = State.RUNNING  # verdict landed: no longer gated on verify
+        if window:  # unless the budget is still covered by leftover cands
+            mark_window_state(req, window)
 
 
 def _clamp_budget(req: Request) -> None:
@@ -112,10 +131,16 @@ def begin_inflight(
     req.inflight = InflightVerify(
         cands=submitted, submitted_iter=submitted_iter, ready_iter=ready_iter
     )
+    # window is out: the request resumes speculating unless its budget is
+    # already covered by outstanding speculation (then it awaits the verdict)
+    if req.state is not State.FINISHED:
+        req.state = (
+            State.AWAITING_VERIFY if req.done_decoding() else State.RUNNING
+        )
     return req.inflight
 
 
-def apply_inflight_result(req: Request) -> None:
+def apply_inflight_result(req: Request, window: int = 0) -> None:
     """Splice an in-flight window's verdict under the outstanding candidates.
 
     Commit rule is identical to ``apply_verify_result`` applied to the
@@ -156,3 +181,7 @@ def apply_inflight_result(req: Request) -> None:
 
     req.inflight = None
     _clamp_budget(req)
+    if req.state is not State.FINISHED:
+        req.state = State.RUNNING  # verdict landed: no longer gated on verify
+        if window:  # unless the budget is still covered by leftover cands
+            mark_window_state(req, window)

@@ -21,13 +21,15 @@ occupancy); the batch-invariant kernel is pinned to splits=1 and eats the
 low-utilisation penalty — this is the mechanism behind paper Fig. 5.
 
 Overlapped iterations (scheduler ``OverlapPolicy``): a composite ``overlap``
-event carries its decode and verify sub-events.  Neither pass alone fills
-the chip (decode is HBM-bound at small batch, the verify window is a short
-fixed-shape pass), so running them concurrently hides most of the shorter
-pass: t = max(t_dec, t_ver) + ``overlap_serial_frac`` * min(t_dec, t_ver),
-the serial fraction modeling shared-resource contention (HBM bandwidth,
-scheduler gaps).  This is always <= t_dec + t_ver — the pause policy's
-cost — and >= max of the two, i.e. overlap is never modeled as free.
+event carries its decode and verify sub-events — and, under chunked
+prefill, a ``prefill_chunk`` sub-event for the co-scheduled prefill lane.
+No single pass fills the chip (decode is HBM-bound at small batch, the
+verify window and a prefill chunk are short fixed-shape passes), so running
+them concurrently hides most of the shorter passes:
+t = max(ts) + ``overlap_serial_frac`` * sum(rest), the serial fraction
+modeling shared-resource contention (HBM bandwidth, scheduler gaps).  This
+is always <= the serial sum — the pause policy's cost — and >= the max,
+i.e. overlap is never modeled as free.
 """
 
 from __future__ import annotations
@@ -108,8 +110,9 @@ def flatten_events(
     out: List[Dict[str, Any]] = []
     for ev in events:
         if ev.get("kind") == "overlap":
-            out.append(ev["decode"])
-            out.append(ev["verify"])
+            for k in ("decode", "verify", "prefill"):
+                if k in ev:
+                    out.append(ev[k])
         else:
             out.append(ev)
     return out
@@ -119,18 +122,23 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
     """Simulated seconds for one engine event on one chip."""
     kind = ev["kind"]
     if kind == "overlap":
-        sub = [dict(ev["decode"]), dict(ev["verify"])]
+        # composite iteration: up to three concurrent passes (decode,
+        # verify launch, prefill chunk).  3-way generalization of the
+        # 2-way rule: the longest pass hides the rest up to a shared-
+        # resource serial fraction — never free, never worse than serial.
+        sub = [dict(ev[k]) for k in ("decode", "verify", "prefill") if k in ev]
         if ev.get("invariant"):
             for s in sub:
                 s["invariant"] = True
-        td, tv = (step_time(cfg, s, hw) for s in sub)
-        return max(td, tv) + hw.overlap_serial_frac * min(td, tv)
+        ts = sorted((step_time(cfg, s, hw) for s in sub), reverse=True)
+        return ts[0] + hw.overlap_serial_frac * sum(ts[1:])
 
     pbytes = cfg.active_param_count() * hw.dtype_bytes
     kvb = kv_bytes_per_token(cfg, hw.dtype_bytes)
-    if kind == "prefill":
+    if kind in ("prefill", "prefill_chunk"):
         tokens = ev["padded"]
-        ctx = tokens / 2
+        start = ev.get("start", 0)  # chunk offset into the prompt
+        ctx = start + tokens / 2
         rows, splits = tokens, 1
         invariant = False
     elif kind == "decode":
@@ -150,12 +158,16 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
 
     flops = flops_per_token(cfg) * tokens + attn_flops(cfg, tokens, ctx)
     # memory: weights stream once per pass; KV read ~ ctx per sequence row
-    if kind == "decode":
-        kv_read = kvb * ev.get("ctx_sum", 0)
-    elif kind == "verify":
+    if kind in ("decode", "verify"):
         kv_read = kvb * ev.get("ctx_sum", 0)
     else:
-        kv_read = kvb * tokens * 0.5 * 0  # prefill writes, reads are causal-local
+        # prefill: causal-local reads — flash-style q-chunks (Q_CHUNK=512)
+        # each stream the cache written so far once, so the pass reads
+        # ~avg-context bytes per q-chunk (ctx already = start + tokens/2);
+        # sliding-window archs never read past the window
+        read_ctx = min(ctx, cfg.window) if cfg.attn_kind == "sliding" else ctx
+        n_qchunks = -(-tokens // 512)
+        kv_read = kvb * read_ctx * max(n_qchunks, 1)
     bytes_moved = pbytes + kv_read + kvb * tokens
 
     peak = hw.peak_flops

@@ -17,8 +17,12 @@ paper prototype's behaviour (verification pauses decoding, §5.2 limitation
 verify group alongside the same iteration's decode batch, with per-request
 in-flight-verify state (``core.dvr``) so a request keeps speculating past a
 window already submitted.  Prefill stays per-request (deterministic by
-construction, never co-batched); decode batches are formed from all
-decodable requests each iteration (continuous batching).
+construction, never co-batched) but is chunk-resumable: with
+``prefill_chunk > 0`` a prompt advances ``C`` tokens per iteration as the
+scheduler's third lane instead of one exclusive pass at admission, so a
+long prompt no longer stalls the decode batch (§5.2 limitation (2));
+decode batches are formed from all decodable requests each iteration
+(continuous batching).
 
 Every device step goes through a jitted function cached per *shape class*
 (batch size, prompt bucket, window) — recompilation per shape is exactly
@@ -77,6 +81,7 @@ class Engine:
         capacity: Optional[int] = None,
         scheduler: Optional[sched.SchedulePolicy] = None,
         verify_latency: int = 1,  # iterations until an overlapped verdict lands
+        prefill_chunk: int = 0,  # tokens per prefill chunk; 0 = exclusive
     ):
         self.cfg = cfg
         self.params = params
@@ -100,6 +105,13 @@ class Engine:
         self.scheduler = scheduler if scheduler is not None else sched.default_policy(mode)
         assert verify_latency >= 1, "a verdict cannot land before its launch"
         self.verify_latency = verify_latency
+        assert prefill_chunk >= 0, "prefill_chunk must be >= 0 (0 = exclusive)"
+        self.prefill_chunk = int(prefill_chunk)
+        # chunked prefill generalizes the sliding-window chunk path to all
+        # attention archs; recurrent/hybrid families keep exclusive prefill
+        # (their commit-point checkpoint is taken at prefill end, and state
+        # advances irreversibly — same constraint that caps their speculation)
+        self.chunked_prefill = self.prefill_chunk > 0 and not self.needs_ckpt
 
         self.queue: List[Request] = []
         self.running: List[Request] = []
@@ -172,6 +184,32 @@ class Engine:
             self._fns[key] = step
         return self._fns[key]
 
+    def _prefill_chunk_fn(self, C: int) -> Callable:
+        """Fixed-shape C-token prefill chunk, usable by every attention arch
+        (generalizes the old sliding-window-only chunk path).  Takes input
+        embeddings so token prompts, prefix embeds (multimodal) and encdec
+        decoder prompts all share one shape class per chunk size."""
+        key = ("prefill_chunk", C)
+        if key not in self._fns:
+            cfg, axes = self.cfg, self.axes
+            schedule = (
+                INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
+                else VERIFY_SCHEDULE
+            )
+
+            @jax.jit
+            def step(params, pool, slot, embeds, start):
+                slots = slot[None]
+                cache = kv_cache.gather(pool, axes, slots)
+                logits, new_cache, _ = forward(
+                    params, cfg, inputs_embeds=embeds, cache=cache,
+                    start_pos=start[None], schedule=schedule,
+                )
+                return kv_cache.scatter(pool, axes, slots, new_cache), logits
+
+            self._fns[key] = step
+        return self._fns[key]
+
     def _cross_fn(self, Se: int) -> Callable:
         key = ("cross", Se)
         if key not in self._fns:
@@ -189,8 +227,60 @@ class Engine:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        self._check_capacity(req)
         req.state = State.QUEUED
         self.queue.append(req)
+
+    def _check_capacity(self, req: Request) -> None:
+        """Admission capacity guard: reject a request whose KV footprint
+        (padded prefill extent + output budget + verify-window overshoot)
+        cannot fit a slot, instead of silently overflowing the pool."""
+        cfg = self.cfg
+        has_full_attn = cfg.attn_kind != "sliding" and any(
+            cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers)
+        )
+        if not has_full_attn:
+            return  # sliding ring buffers wrap; recurrent state is O(1)
+        prefix = cfg.num_prefix_embeds or 0
+        L = prefix + req.prompt_len
+        if self._use_chunked(req):
+            C = self._chunk_size()
+            extent = -(-L // C) * C  # the last chunk pads to the chunk shape
+        else:
+            extent = prefix + _bucket(req.prompt_len)
+        spec = (
+            self.window
+            if self.mode == Mode.LLM42 and req.sampling.is_deterministic
+            else 0
+        )
+        # peak slot usage is the MAX of the two phases, not their sum:
+        # decode/verify writes start at L and overwrite the prefill pad tail
+        need = max(extent, L + req.sampling.max_new_tokens + spec)
+        if need > self.capacity:
+            raise ValueError(
+                f"request {req.rid} cannot fit the KV pool: "
+                f"max(prefill extent {extent}, prompt {L} + max_new_tokens "
+                f"{req.sampling.max_new_tokens} + verify window {spec}) = "
+                f"{need} > capacity {self.capacity}"
+            )
+
+    def _chunk_size(self) -> int:
+        """Effective prefill chunk (ring-buffer contract caps it at the
+        sliding window so a pass never overwrites in-window keys)."""
+        C = self.prefill_chunk
+        if self.cfg.attn_kind == "sliding":
+            C = min(C, self.cfg.window)
+        return max(1, C)
+
+    def _use_chunked(self, req: Request) -> bool:
+        """Chunked lane only when the prompt actually spans > 1 chunk: a
+        prompt that fits one chunk runs the legacy exclusive pass — same
+        single-iteration stall, but padded to its (smaller) power-of-two
+        bucket instead of the full chunk width."""
+        if not self.chunked_prefill:
+            return False
+        prefix = self.cfg.num_prefix_embeds or 0
+        return prefix + req.prompt_len > self._chunk_size()
 
     def _admit(self) -> None:
         while self.queue and self.pool.num_free() > 0 and (
@@ -198,26 +288,116 @@ class Engine:
         ):
             req = self.queue.pop(0)
             req.slot = self.pool.alloc()
-            self._prefill(req)
-            req.state = State.RUNNING
+            if self._use_chunked(req):
+                # third lane: prefill advances chunk-by-chunk via scheduler
+                # plans instead of one exclusive pass at admission
+                self._prepare_prefill(req)
+                req.state = State.PREFILLING
+            else:
+                self._prefill(req)
+                req.state = State.RUNNING
             self.running.append(req)
 
-    def _prefill(self, req: Request) -> None:
+    def _build_cross(self, req: Request) -> None:
+        assert req.enc_embeds is not None, "encdec request needs enc_embeds"
+        cross = self._cross_fn(req.enc_embeds.shape[1])(self.params, req.enc_embeds)
+        slot = jnp.array([req.slot])
+        cross_axes = {"k": 1, "v": 1, "mask": 0}
+        self.pool.data["cross"] = kv_cache.scatter(
+            self.pool.data["cross"], cross_axes, slot, cross
+        )
+
+    def _prepare_prefill(self, req: Request) -> None:
+        """Host-side setup for chunk-resumable prefill: side inputs (cross
+        cache, prefix embeds) and the chunk cursor.  Chunks embed their own
+        token slice on demand (``_chunk_embeds``), so residency stays
+        O(chunk), not O(prompt)."""
         cfg = self.cfg
         req._prefix_len = cfg.num_prefix_embeds
         if cfg.family == "encdec":
-            assert req.enc_embeds is not None, "encdec request needs enc_embeds"
-            cross = self._cross_fn(req.enc_embeds.shape[1])(self.params, req.enc_embeds)
-            slot = jnp.array([req.slot])
-            cross_axes = {"k": 1, "v": 1, "mask": 0}
-            self.pool.data["cross"] = kv_cache.scatter(
-                self.pool.data["cross"], cross_axes, slot, cross
+            self._build_cross(req)
+        if cfg.num_prefix_embeds:
+            prefix = req.prefix_embeds
+            if prefix is None:
+                prefix = jnp.zeros(
+                    (1, cfg.num_prefix_embeds, cfg.d_model), jnp.dtype(cfg.dtype)
+                )
+            req._prefix_src = prefix
+        req.prefill_total = (cfg.num_prefix_embeds or 0) + req.prompt_len
+        req.prefill_pos = 0
+
+    def _chunk_embeds(self, req: Request, s: int, C: int) -> jax.Array:
+        """Input embeddings for prefill positions [s, s+C): prefix embeds
+        where the chunk overlaps the prefix region, token embeddings for
+        the prompt slice.  At most C real positions materialize."""
+        prefix = getattr(req, "_prefix_len", 0) or 0
+        parts = []
+        if s < prefix:
+            parts.append(req._prefix_src[:, s : min(prefix, s + C)])
+        lo = max(s - prefix, 0)
+        hi = min(s + C - prefix, req.prompt_len)
+        if hi > lo:
+            toks = jnp.array([req.prompt[lo:hi]], jnp.int32)
+            parts.append(jnp.take(self.params["embed"], toks, axis=0))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+    def _pad_embed(self) -> jax.Array:
+        """(1, 1, D) embedding of token 0 — the legacy pad content."""
+        if not hasattr(self, "_pad_row"):
+            self._pad_row = jnp.take(
+                self.params["embed"], jnp.array([[0]], jnp.int32), axis=0
             )
+        return self._pad_row
+
+    def _prefill_advance(self, req: Request, C: int) -> Dict[str, Any]:
+        """Advance one fixed-shape C-token prefill chunk; the final chunk
+        samples T0 and flips the request to RUNNING.  Pad positions embed
+        token 0 (exactly the legacy padded passes); their KV lands past the
+        prompt and is overwritten by decode before it can ever mask in."""
+        s = req.prefill_pos
+        total = req.prefill_total
+        emb = self._chunk_embeds(req, s, C)
+        real = emb.shape[1]
+        if real < C:
+            pad = jnp.broadcast_to(self._pad_embed(), (1, C - real, emb.shape[2]))
+            emb = jnp.concatenate([emb, pad], axis=1)
+        t0 = time.perf_counter()
+        self.pool.data, logits = self._prefill_chunk_fn(C)(
+            self.params, self.pool.data, jnp.int32(req.slot), emb, jnp.int32(s)
+        )
+        wall = time.perf_counter() - t0
+        req.prefill_pos = s + real
+        done = req.prefill_pos >= total
+        if done:
+            tok = sample_token(
+                logits[0, total - 1 - s], jnp.int32(req.sampling.seed),
+                jnp.int32(0), jnp.float32(req.sampling.temperature),
+                jnp.int32(req.sampling.top_k),
+            )
+            if self.needs_ckpt:  # commit point == post-prefill state
+                slot = jnp.array([req.slot], jnp.int32)
+                grabbed = kv_cache.gather(self.pool.data, self.axes, slot)
+                self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
+            req.committed.append(int(tok))  # T0: deterministic by construction
+            req.prefill_time = self._now
+            req.state = State.RUNNING
+            req._prefix_src = None
+        return {
+            "kind": "prefill_chunk", "tokens": real, "padded": C, "start": s,
+            "wall": wall, "iter": self._now, "rid": req.rid, "done": done,
+        }
+
+    def _prefill(self, req: Request) -> None:
+        cfg = self.cfg
         P = _bucket(req.prompt_len)
         if cfg.attn_kind == "sliding" and P > cfg.window:
             # ring-buffer contract: feed the prompt in window-sized chunks
+            self._prepare_prefill(req)
             self._prefill_sliding(req)
             return
+        req._prefix_len = cfg.num_prefix_embeds
+        if cfg.family == "encdec":
+            self._build_cross(req)
         tokens = jnp.array(
             [req.prompt + [0] * (P - req.prompt_len)], jnp.int32
         )
@@ -246,48 +426,15 @@ class Engine:
         })
 
     def _prefill_sliding(self, req: Request) -> None:
-        """Chunked prefill for sliding-window archs (<= window per pass).
-        Per-request fixed chunking => still deterministic by construction."""
-        cfg = self.cfg
-        W = cfg.window
-        key = ("prefill_chunk", W)
-        if key not in self._fns:
-            axes = self.axes
-
-            @jax.jit
-            def chunk_fn(params, pool, slot, tokens, start):
-                slots = slot[None]
-                cache = kv_cache.gather(pool, axes, slots)
-                logits, new_cache, _ = forward(
-                    params, cfg, tokens, cache=cache,
-                    start_pos=start[None], schedule=VERIFY_SCHEDULE,
-                )
-                return kv_cache.scatter(pool, axes, slots, new_cache), logits
-
-            self._fns[key] = chunk_fn
-        t0 = time.perf_counter()
-        prompt = req.prompt
-        logits = None
-        for s in range(0, len(prompt), W):
-            chunk = prompt[s : s + W]
-            chunk = chunk + [0] * (W - len(chunk))  # fixed shape per chunk
-            self.pool.data, logits = self._fns[key](
-                self.params, self.pool.data, jnp.int32(req.slot),
-                jnp.array([chunk], jnp.int32), jnp.int32(s),
-            )
-        last = (len(prompt) - 1) % W
-        tok = sample_token(
-            logits[0, last], jnp.int32(req.sampling.seed), jnp.int32(0),
-            jnp.float32(req.sampling.temperature),
-            jnp.int32(req.sampling.top_k),
-        )
-        wall = time.perf_counter() - t0
-        if self.needs_ckpt:
-            slot = jnp.array([req.slot], jnp.int32)
-            grabbed = kv_cache.gather(self.pool.data, self.axes, slot)
-            self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
-        req.committed.append(int(tok))
-        req.prefill_time = self._now
+        """Exclusive chunked prefill for sliding-window archs (<= window per
+        pass — the ring-buffer contract).  Runs the same chunk machinery as
+        the co-scheduled lane, synchronously, and emits one legacy
+        ``prefill`` event.  Per-request fixed chunking => still
+        deterministic by construction."""
+        W = self.cfg.window
+        wall = 0.0
+        while req.prefill_pos < req.prefill_total:
+            wall += self._prefill_advance(req, W)["wall"]
         self.events.append({
             "kind": "prefill", "tokens": req.prompt_len,
             "padded": ((req.prompt_len + W - 1) // W) * W, "wall": wall,
@@ -306,6 +453,9 @@ class Engine:
             speculate_past_inflight=not self.needs_ckpt,
             now=self._now,
             verify_latency=self.verify_latency,
+            prefilling=tuple(
+                r for r in self.running if r.state is State.PREFILLING
+            ),
         )
 
     # ------------------------------------------------------------------
@@ -342,6 +492,7 @@ class Engine:
         for r, t in zip(batch, nxt):
             if self.mode == Mode.LLM42 and r.sampling.is_deterministic:
                 r.candidates.append(t)
+                dvr.mark_window_state(r, self.window)
             else:
                 r.committed.append(t)
         return {
@@ -415,7 +566,7 @@ class Engine:
                 fl.n_match, fl.commit_tok = n, t
         else:
             for r, n, t in zip(rows, n_match, commit_tok):
-                dvr.apply_verify_result(r, n, t)
+                dvr.apply_verify_result(r, n, t, window=W)
         return {
             "kind": "verify", "group": len(rows), "window": W, "pad_rows": n_pad,
             "ctx_sum": sum(starts) + W * G, "wall": wall, "iter": self._now,
@@ -449,27 +600,34 @@ class Engine:
     def step(self) -> bool:
         """One scheduler iteration.  Returns False when fully drained.
 
-        Order within an iteration: land due verdicts, plan, DECODE, then
-        VERIFY launch.  Decode-before-verify is a correctness requirement,
-        not taste: the decode of a row being submitted this iteration
-        re-feeds its last candidate, writing fast-path KV at the window's
-        final position — a position the verify replay is about to repair
-        and that no later replay will ever cover again.  Launching the
-        verify afterwards lets its repair win; every later speculative
-        write lands at positions >= the next window start, which the next
-        replay rewrites.  An iteration that ran both passes emits a single
-        composite ``overlap`` event so the cost model can charge them as
-        concurrent (``costmodel.step_time``)."""
+        Order within an iteration: land due verdicts, retire, admit, plan,
+        PREFILL chunk, DECODE, then VERIFY launch.  Verdicts land *before*
+        retirement so a request whose final in-flight verdict is due this
+        iteration retires this iteration — not one late (``finish_time``
+        off-by-one, drain one step longer).  Decode-before-verify is a
+        correctness requirement, not taste: the decode of a row being
+        submitted this iteration re-feeds its last candidate, writing
+        fast-path KV at the window's final position — a position the verify
+        replay is about to repair and that no later replay will ever cover
+        again.  Launching the verify afterwards lets its repair win; every
+        later speculative write lands at positions >= the next window
+        start, which the next replay rewrites.  The prefill chunk touches
+        only its own (PREFILLING) slot, so it is order-independent.  An
+        iteration that ran >= 2 passes emits a single composite ``overlap``
+        event so the cost model can charge them as concurrent
+        (``costmodel.step_time``)."""
         self._now += 1
+        applied = self._apply_due_verdicts()
         self._retire()
         self._admit()
         if not self.running and not self.queue:
             return False
 
-        applied = self._apply_due_verdicts()
         view = self._view()
         plan = self.scheduler.plan(view)
-        vev = dev = None
+        pev = dev = vev = None
+        if plan.prefill is not None:
+            pev = self._prefill_advance(plan.prefill, self._chunk_size())
         if plan.decode:
             batch = [r for r in plan.decode if not r.done_decoding()]
             if batch:
@@ -480,16 +638,17 @@ class Engine:
                 n_decodable=len(sched.decodable(view)),
             )
 
-        if vev is not None and dev is not None:
+        subs = [("decode", dev), ("verify", vev), ("prefill", pev)]
+        present = [(k, ev) for k, ev in subs if ev is not None]
+        if len(present) >= 2:
             self.events.append({
-                "kind": "overlap", "decode": dev, "verify": vev,
-                "wall": dev["wall"] + vev["wall"], "iter": self._now,
+                "kind": "overlap", **dict(present),
+                "wall": sum(ev["wall"] for _, ev in present),
+                "iter": self._now,
             })
-        elif vev is not None:
-            self.events.append(vev)
-        elif dev is not None:
-            self.events.append(dev)
-        if vev is not None or dev is not None or applied:
+        elif present:
+            self.events.append(present[0][1])
+        if present or applied:
             return True
         return bool(self.running or self.queue)
 
@@ -499,7 +658,7 @@ class Engine:
         for r in self.running:
             fl = r.inflight
             if fl is not None and fl.n_match >= 0 and fl.ready_iter <= self._now:
-                dvr.apply_inflight_result(r)
+                dvr.apply_inflight_result(r, window=self.window)
                 applied = True
         return applied
 

@@ -15,6 +15,7 @@ from typing import List, Optional
 
 class State(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"  # admitted; prompt advancing chunk by chunk
     RUNNING = "running"  # decoding (candidates may be outstanding)
     AWAITING_VERIFY = "awaiting_verify"  # candidate window full, needs verify
     FINISHED = "finished"
@@ -58,6 +59,11 @@ class Request:
     # --- runtime state (engine-managed) ---
     state: State = State.QUEUED
     slot: int = -1
+    # chunk-resumable prefill progress (chunked-prefill lane): positions
+    # [0, prefill_pos) of the input sequence (prefix embeds + prompt) are
+    # already written into the cache; prefill_total is the full length.
+    prefill_pos: int = 0
+    prefill_total: int = 0
     committed: List[int] = dataclasses.field(default_factory=list)
     candidates: List[int] = dataclasses.field(default_factory=list)
     # window submitted for verification while decoding continues (OverlapPolicy)
@@ -75,6 +81,11 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def prefill_remaining(self) -> int:
+        """Input positions still to be written (0 once prefill completes)."""
+        return max(0, self.prefill_total - self.prefill_pos)
 
     @property
     def num_output(self) -> int:

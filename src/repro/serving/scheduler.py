@@ -14,6 +14,16 @@ whole non-deterministic fast path.  This module makes that choice pluggable:
   flight — ``core.dvr.begin_inflight`` / ``apply_inflight_result`` own the
   splice/rollback bookkeeping.
 
+Prefill is the third lane (§5.2 limitation (2)): when the engine runs with
+``prefill_chunk > 0``, admitted requests enter ``State.PREFILLING`` and
+advance one fixed-shape chunk per iteration instead of one exclusive
+whole-prompt pass at admission.  ``OverlapPolicy`` co-schedules one chunk
+(shortest-remaining-first) with the iteration's decode batch and verify
+launch; ``PauseDecodePolicy`` runs chunks exclusively, preserving the
+prototype's prefill-stalls-everything semantics chunk by chunk.  A
+per-request fixed chunk schedule is shape-consistent by construction, so
+committed streams are bitwise identical across chunk sizes too.
+
 A policy is a pure function from a :class:`SchedulerView` (what is
 decodable, what is ready to verify) to a :class:`Plan` (what this iteration
 runs).  It decides *scheduling*, never token semantics — the committed
@@ -32,11 +42,11 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 from repro.core import dvr
 from repro.core.determinism import Mode
-from repro.serving.request import Request
+from repro.serving.request import Request, State
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,25 +63,31 @@ class SchedulerView:
     #: iterations until a launched verdict lands (Engine.verify_latency);
     #: at 1, verdicts land before the same iteration's decode batch runs
     verify_latency: int = 1
+    #: requests mid chunked-prefill (State.PREFILLING), admission order;
+    #: empty when the engine runs legacy exclusive prefill (chunk size 0)
+    prefilling: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """What one engine iteration executes.  ``verify`` non-empty launches a
-    grouped verification pass; ``decode`` non-empty runs a decode batch.
-    Both non-empty == an overlapped iteration (costed as concurrent by the
-    cost model)."""
+    grouped verification pass; ``decode`` non-empty runs a decode batch;
+    ``prefill`` non-None advances that request's prefill by one fixed-shape
+    chunk.  Multiple lanes non-empty == an overlapped iteration (costed as
+    concurrent by the cost model)."""
 
     decode: List[Request] = dataclasses.field(default_factory=list)
     verify: List[Request] = dataclasses.field(default_factory=list)
+    prefill: Optional[Request] = None
 
     @property
     def overlapped(self) -> bool:
-        return bool(self.decode) and bool(self.verify)
+        lanes = bool(self.decode) + bool(self.verify) + (self.prefill is not None)
+        return lanes >= 2
 
     @property
     def empty(self) -> bool:
-        return not self.decode and not self.verify
+        return not self.decode and not self.verify and self.prefill is None
 
 
 def decodable(view: SchedulerView) -> List[Request]:
@@ -79,6 +95,8 @@ def decodable(view: SchedulerView) -> List[Request]:
     out = []
     max_cand = dvr.candidates_per_window(view.window)
     for r in view.running:
+        if r.state is State.PREFILLING:
+            continue  # no committed token yet: nothing to decode from
         if r.done_decoding():
             continue
         if view.mode == Mode.LLM42 and r.sampling.is_deterministic:
@@ -120,6 +138,11 @@ class PauseDecodePolicy(SchedulePolicy):
     name = "pause_decode"
 
     def plan(self, view: SchedulerView) -> Plan:
+        if view.prefilling:
+            # exclusive prefill chunk, head of line: the prototype's
+            # synchronous-prefill semantics, merely sliced into fixed-shape
+            # pieces — nothing else runs while a prompt is prefilling
+            return Plan(prefill=view.prefilling[0])
         ready = verify_ready(view)
         dec = decodable(view)
         if ready and (len(ready) >= view.group or not dec):
@@ -156,6 +179,9 @@ class OverlapPolicy(SchedulePolicy):
             may_join = any(
                 r.sampling.is_deterministic
                 and id(r) not in ready_set
+                # a PREFILLING request's join horizon (finish prefill, then
+                # fill a window) is too far out to hold a ready group for
+                and r.state is not State.PREFILLING
                 and (r.inflight is not None or not r.done_decoding())
                 for r in view.running
             )
@@ -172,7 +198,25 @@ class OverlapPolicy(SchedulePolicy):
             for r in ready[: view.group]:
                 if not r.done_decoding():
                     dec.append(r)
-        return Plan(decode=dec, verify=ready)
+        prefill = None
+        if view.prefilling:
+            # one prefill chunk rides alongside the decode batch and verify
+            # launch, picked shortest-remaining-first — a short prompt's
+            # single chunk never queues behind a long prefill (head-of-line
+            # blocking; ties break by admission order, stable min).  Every
+            # fourth iteration serves the admission-order head instead, so
+            # a sustained stream of short arrivals can never starve a long
+            # prefill (it advances at least every 4 iterations) while
+            # shorts rarely wait more than one extra slot.  Lane order
+            # never affects token semantics — per-request prefill numerics
+            # are independent of when the chunks run.
+            if view.now % 4 == 0:
+                prefill = view.prefilling[0]
+            else:
+                prefill = min(
+                    view.prefilling, key=lambda r: r.prefill_remaining
+                )
+        return Plan(decode=dec, verify=ready, prefill=prefill)
 
 
 def default_policy(mode: Mode) -> SchedulePolicy:

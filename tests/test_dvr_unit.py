@@ -5,7 +5,7 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dvr
-from repro.serving.request import Request, SamplingParams
+from repro.serving.request import Request, SamplingParams, State
 from repro.serving.sampler import sample_batch, sample_token, sample_window
 
 
@@ -151,6 +151,80 @@ class TestInflightVerify:
                 dvr.apply_inflight_result(r)
                 assert len(r.committed) >= before + 1
                 assert r.inflight is None
+
+
+class TestStateMachine:
+    """AWAITING_VERIFY wiring: the state is truthful, not decorative.
+
+    A det request is AWAITING_VERIFY exactly while it cannot take a
+    fast-path token because it is gated on verification — window full, or
+    budget covered by outstanding speculation.  Every verdict (sync or
+    in-flight) returns it to RUNNING."""
+
+    def test_window_full_awaits_verify(self):
+        r = _req([10], [20, 30, 40])
+        r.state = State.RUNNING
+        r.candidates.append(50)  # 4 == W-1 for window 5
+        dvr.mark_window_state(r, window=5)
+        assert r.state is State.AWAITING_VERIFY
+
+    def test_partial_window_keeps_running(self):
+        r = _req([10], [20])
+        r.state = State.RUNNING
+        dvr.mark_window_state(r, window=5)
+        assert r.state is State.RUNNING
+
+    def test_budget_covered_by_speculation_awaits(self):
+        r = _req([10], [20, 30], max_new=3)  # total_generated == budget
+        r.state = State.RUNNING
+        dvr.mark_window_state(r, window=5)
+        assert r.state is State.AWAITING_VERIFY
+
+    def test_sync_verdict_returns_to_running(self):
+        r = _req([10], [20, 30, 40, 50])
+        r.state = State.AWAITING_VERIFY
+        dvr.apply_verify_result(r, n_match=2, commit_tok=99)
+        assert r.state is State.RUNNING
+
+    def test_begin_inflight_resumes_speculation(self):
+        r = _req([10], [20, 30, 40, 50])
+        r.state = State.AWAITING_VERIFY
+        dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        assert r.state is State.RUNNING  # window out: decoding resumes
+
+    def test_begin_inflight_with_exhausted_budget_stays_awaiting(self):
+        r = _req([10], [20, 30, 40, 50], max_new=5)
+        r.state = State.AWAITING_VERIFY
+        dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        assert r.state is State.AWAITING_VERIFY
+
+    def test_inflight_verdict_returns_to_running(self):
+        r = _req([10], [20, 30, 40, 50])
+        r.state = State.AWAITING_VERIFY
+        fl = dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        fl.n_match, fl.commit_tok = 4, 60
+        dvr.apply_inflight_result(r, window=5)
+        assert r.state is State.RUNNING
+
+    def test_inflight_verdict_stays_awaiting_when_leftovers_cover_budget(self):
+        """Truthfulness after an in-flight verdict: if surviving
+        speculated-past candidates already cover the output budget, the
+        request still cannot take a fast-path token — it awaits the next
+        verify launch, not decoding."""
+        r = _req([10], [20, 30, 40, 50, 60, 61], max_new=7)
+        fl = dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        fl.n_match, fl.commit_tok = 4, 60  # full match, tail survives
+        dvr.apply_inflight_result(r, window=5)
+        assert r.committed == [10, 20, 30, 40, 50, 60]
+        assert r.candidates == [61]  # 6 committed + 1 candidate == budget 7
+        assert r.done_decoding()
+        assert r.state is State.AWAITING_VERIFY
+
+    def test_finished_is_never_clobbered(self):
+        r = _req([10], [20])
+        r.state = State.FINISHED
+        dvr.apply_verify_result(r, n_match=1, commit_tok=30)
+        assert r.state is State.FINISHED
 
 
 class TestSampler:

@@ -1,0 +1,322 @@
+"""Chunked-prefill lane: chunk-resume unit behavior, family coverage
+(dense / sliding-window / prefix-embeds / encdec), the admission capacity
+guard, and the cost model's prefill terms (causal KV reads, 3-way overlap).
+
+The headline determinism property — committed streams bitwise identical
+across chunk sizes, policies and arrival orders under mixed det/non-det
+traffic — lives in ``tests/test_scheduler.py``.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.determinism import Mode
+from repro.models import init_params
+from repro.models.multimodal import audio_frames, vision_embeds
+from repro.serving import costmodel
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams, State
+from repro.serving.scheduler import (
+    OverlapPolicy,
+    PauseDecodePolicy,
+    SchedulerView,
+)
+
+
+def _cfg(family: str):
+    if family == "dense":
+        return get_smoke_config("llama3-8b")
+    if family == "sliding":
+        return dataclasses.replace(
+            get_smoke_config("phi3-mini-3.8b"), attn_kind="sliding", window=8
+        )
+    if family == "prefix":
+        return get_smoke_config("llava-next-mistral-7b")
+    if family == "encdec":
+        return get_smoke_config("seamless-m4t-medium")
+    raise ValueError(family)
+
+
+_MODELS = {}
+
+
+def _model(family: str):
+    if family not in _MODELS:
+        cfg = _cfg(family)
+        _MODELS[family] = (cfg, init_params(cfg, jax.random.key(0)))
+    return _MODELS[family]
+
+
+def _req(cfg, plen=21, max_new=6, seed=7, det=False, rid=0):
+    r = Request(
+        rid=rid, prompt=[(3 + 5 * j) % cfg.vocab_size for j in range(plen)],
+        sampling=SamplingParams(max_new_tokens=max_new,
+                                is_deterministic=det, seed=seed),
+    )
+    if cfg.family == "encdec":
+        r.enc_embeds = audio_frames(
+            jax.random.PRNGKey(0), 1, cfg.encoder_seq_len, cfg.d_model
+        )
+    if cfg.num_prefix_embeds:
+        r.prefix_embeds = vision_embeds(
+            jax.random.PRNGKey(0), 1, cfg.d_model, num_tiles=0
+        )[:, : cfg.num_prefix_embeds]
+    return r
+
+
+class TestChunkResume:
+    def test_prefill_pos_advances_chunk_by_chunk(self):
+        cfg, params = _model("dense")
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=4,
+                     capacity=256, prefill_chunk=8)
+        req = _req(cfg, plen=21, max_new=4)
+        eng.submit(req)
+        total = 21  # no prefix embeds
+        seen_pos = []
+        while req.state is not State.RUNNING:
+            eng.step()
+            seen_pos.append(req.prefill_pos)
+        assert req.prefill_total == total
+        # 21 tokens at C=8: three chunks of 8/8/5 real tokens
+        assert seen_pos == [8, 16, 21]
+        assert req.committed  # T0 sampled on the final chunk
+        assert req.prefill_remaining == 0
+        chunk_evs = [e for e in eng.events if e["kind"] == "prefill_chunk"]
+        assert [e["start"] for e in chunk_evs] == [0, 8, 16]
+        assert [e["tokens"] for e in chunk_evs] == [8, 8, 5]
+        assert all(e["padded"] == 8 for e in chunk_evs)
+        assert [e["done"] for e in chunk_evs] == [False, False, True]
+
+    def test_prefilling_requests_never_decode_or_verify(self):
+        """A PREFILLING request has no committed token: the scheduler must
+        not hand it to the decode batch or a verify group.  The prefilling
+        state is snapshotted BEFORE each step so events emitted while the
+        request was mid-prefill are checked against that, not against its
+        state after the step."""
+        cfg, params = _model("dense")
+        eng = Engine(cfg, params, mode=Mode.LLM42, window=5, group=2,
+                     max_batch=4, capacity=256, prefill_chunk=4)
+        short = _req(cfg, plen=5, max_new=8, det=True, rid=0)
+        long = _req(cfg, plen=40, max_new=8, rid=1)
+        eng.submit(short)
+        eng.submit(long)
+        n_ev = 0
+        saw_prefilling_iter = False
+        for _ in range(100):
+            was_prefilling = long.state is State.PREFILLING
+            if not eng.step():
+                break
+            new = costmodel.flatten_events(eng.events[n_ev:])
+            n_ev = len(eng.events)
+            if was_prefilling and long.slot >= 0:
+                saw_prefilling_iter = True
+                for ev in new:
+                    if ev["kind"] in ("decode", "verify"):
+                        assert long.rid not in ev["rids"], ev
+        assert saw_prefilling_iter  # the guard actually exercised something
+        done = {r.rid: r for r in eng.finished}
+        assert len(done) == 2
+        assert all(len(r.committed) == 8 for r in done.values())
+
+    @pytest.mark.parametrize("family", ["dense", "sliding", "prefix", "encdec"])
+    def test_families_bitwise_identical_to_exclusive(self, family):
+        """Chunk-resumable prefill commits the same stream as the legacy
+        exclusive pass for every attention family, at every chunk size."""
+        cfg, params = _model(family)
+
+        def run(chunk):
+            eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=4,
+                         capacity=256, prefill_chunk=chunk)
+            eng.submit(_req(cfg))
+            return eng.run()[0].committed
+
+        base = run(0)
+        for chunk in (4, 8):
+            assert run(chunk) == base, (family, chunk)
+
+    def test_recurrent_family_falls_back_to_exclusive(self):
+        """ssm/hybrid archs keep exclusive prefill (irreversible state):
+        prefill_chunk is accepted but the lane never activates."""
+        cfg = get_smoke_config("rwkv6-3b")
+        params = init_params(cfg, jax.random.key(0))
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2,
+                     capacity=128, prefill_chunk=8)
+        assert not eng.chunked_prefill
+        eng.submit(_req(cfg, plen=9, max_new=4))
+        done = eng.run()
+        assert len(done[0].committed) == 4
+        assert not any(
+            e["kind"] == "prefill_chunk"
+            for e in costmodel.flatten_events(eng.events)
+        )
+
+
+class TestCapacityGuard:
+    def test_boundary(self):
+        """Peak usage is max(prefill extent, prompt + budget), not the sum —
+        decode writes overwrite the prefill pad tail."""
+        cfg, params = _model("dense")
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2, capacity=64)
+        # 21 + max_new must fit capacity 64 exactly (bucket(21) = 32 < 64)
+        eng.submit(_req(cfg, plen=21, max_new=43, rid=0))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(_req(cfg, plen=21, max_new=44, rid=1))
+        # a padded prompt that fits exactly is accepted (sum would reject)
+        eng.submit(_req(cfg, plen=60, max_new=4, rid=2))  # bucket(60) = 64
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(_req(cfg, plen=65, max_new=4, rid=3))  # bucket 128
+
+    def test_det_requests_reserve_the_verify_window(self):
+        cfg, params = _model("dense")
+        eng = Engine(cfg, params, mode=Mode.LLM42, window=8, max_batch=2,
+                     capacity=64)
+        eng.submit(_req(cfg, plen=21, max_new=35, det=True, rid=0))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(_req(cfg, plen=21, max_new=36, det=True, rid=1))
+
+    def test_chunked_extent_uses_chunk_padding(self):
+        cfg, params = _model("dense")
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2, capacity=48,
+                     prefill_chunk=32)
+        eng.submit(_req(cfg, plen=32, max_new=8, rid=0))  # extent 32
+        with pytest.raises(ValueError, match="cannot fit"):
+            # 33 tokens pad to two 32-chunks: extent 64 > 48
+            eng.submit(_req(cfg, plen=33, max_new=8, rid=1))
+
+    def test_sliding_ring_buffer_never_rejects(self):
+        cfg, params = _model("sliding")
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2, capacity=64)
+        eng.submit(_req(cfg, plen=120, max_new=8))  # wraps, by design
+        assert len(eng.queue) == 1
+
+
+class TestPrefillCostModel:
+    def _prefill_ev(self, padded, start=0, kind="prefill"):
+        ev = {"kind": kind, "tokens": padded, "padded": padded, "wall": 0.0,
+              "iter": 1}
+        if kind == "prefill_chunk":
+            ev["start"] = start
+        return ev
+
+    def test_prefill_kv_read_is_nonzero(self):
+        """Regression: the seed priced causal KV reads during prefill at
+        zero bytes (a dead ``* 0`` expression), underestimating prefill
+        memory time."""
+        cfg = get_smoke_config("llama3-8b")
+        # memory-only hardware: infinite FLOPs isolate the bytes term
+        hw = dataclasses.replace(costmodel.V5E, peak_flops=1e30)
+        t = costmodel.step_time(cfg, self._prefill_ev(256), hw)
+        pbytes = cfg.active_param_count() * hw.dtype_bytes
+        kvb = costmodel.kv_bytes_per_token(cfg, hw.dtype_bytes)
+        weights_and_writes = (pbytes + kvb * 256) / hw.hbm_bw
+        assert t > weights_and_writes  # reads contribute, not just writes
+        expected = (pbytes + kvb * 256 + kvb * 128) / hw.hbm_bw
+        assert t == pytest.approx(expected)
+
+    def test_chunk_cost_grows_with_context_depth(self):
+        """A later chunk reads a deeper cache: same shape, higher cost."""
+        cfg = get_smoke_config("llama3-8b")
+        hw = dataclasses.replace(costmodel.V5E, peak_flops=1e30)
+        early = costmodel.step_time(
+            cfg, self._prefill_ev(64, start=0, kind="prefill_chunk"), hw)
+        late = costmodel.step_time(
+            cfg, self._prefill_ev(64, start=512, kind="prefill_chunk"), hw)
+        assert late > early
+
+    def test_three_way_overlap_charges_max_plus_contention(self):
+        cfg = get_smoke_config("llama3-8b")
+        hw = costmodel.V5E
+        dev = {"kind": "decode", "batch": 4, "ctx_sum": 200,
+               "schedule": (1, 1, "float32", False), "wall": 0.0, "iter": 1}
+        vev = {"kind": "verify", "group": 4, "window": 8, "ctx_sum": 400,
+               "wall": 0.0, "iter": 1}
+        pev = self._prefill_ev(64, start=128, kind="prefill_chunk")
+        parts = sorted(
+            (costmodel.step_time(cfg, e, hw) for e in (dev, vev, pev)),
+            reverse=True,
+        )
+        got = costmodel.step_time(
+            cfg, {"kind": "overlap", "decode": dev, "verify": vev,
+                  "prefill": pev, "wall": 0.0, "iter": 1}, hw)
+        assert got == pytest.approx(
+            parts[0] + hw.overlap_serial_frac * sum(parts[1:])
+        )
+        assert parts[0] < got < sum(parts)
+
+    def test_flatten_expands_prefill_sub_event(self):
+        pev = self._prefill_ev(8, kind="prefill_chunk")
+        dev = {"kind": "decode", "batch": 1, "wall": 0.0, "iter": 1}
+        flat = costmodel.flatten_events(
+            [{"kind": "overlap", "decode": dev, "prefill": pev,
+              "wall": 0.0, "iter": 1}]
+        )
+        assert [e["kind"] for e in flat] == ["decode", "prefill_chunk"]
+
+
+class TestPrefillPlans:
+    def _prefilling(self, rid, remaining, total=100):
+        r = Request(rid=rid, prompt=[1, 2, 3],
+                    sampling=SamplingParams(max_new_tokens=10))
+        r.state = State.PREFILLING
+        r.prefill_total = total
+        r.prefill_pos = total - remaining
+        return r
+
+    def _decodable(self, rid):
+        r = Request(rid=rid, prompt=[1, 2, 3],
+                    sampling=SamplingParams(max_new_tokens=10))
+        r.committed = [5]
+        r.state = State.RUNNING
+        return r
+
+    def _view(self, running, now=1):
+        return SchedulerView(
+            running=tuple(running), mode=Mode.LLM42, window=5, group=2,
+            speculate_past_inflight=True, now=now,
+            prefilling=tuple(
+                r for r in running if r.state is State.PREFILLING
+            ),
+        )
+
+    def test_pause_runs_prefill_exclusively(self):
+        pre = self._prefilling(0, remaining=50)
+        dec = self._decodable(1)
+        plan = PauseDecodePolicy().plan(self._view([pre, dec]))
+        assert plan.prefill is pre
+        assert not plan.decode and not plan.verify
+
+    def test_overlap_coschedules_prefill_with_decode(self):
+        pre = self._prefilling(0, remaining=50)
+        dec = self._decodable(1)
+        plan = OverlapPolicy().plan(self._view([pre, dec]))
+        assert plan.prefill is pre
+        assert [r.rid for r in plan.decode] == [1]
+        assert plan.overlapped
+
+    def test_overlap_picks_shortest_remaining_prefill(self):
+        """A short prompt's single chunk must not queue behind a long
+        prefill (head-of-line blocking)."""
+        long = self._prefilling(0, remaining=900, total=1000)
+        short = self._prefilling(1, remaining=12, total=12)
+        plan = OverlapPolicy().plan(self._view([long, short], now=1))
+        assert plan.prefill is short
+        # ties break by admission order
+        a = self._prefilling(2, remaining=30)
+        b = self._prefilling(3, remaining=30)
+        plan2 = OverlapPolicy().plan(self._view([a, b], now=1))
+        assert plan2.prefill is a
+
+    def test_overlap_never_starves_a_long_prefill(self):
+        """Every fourth iteration serves the admission-order head, so a
+        stream of short arrivals cannot starve a long prefill forever."""
+        long = self._prefilling(0, remaining=900, total=1000)
+        short = self._prefilling(1, remaining=12, total=12)
+        picks = [
+            OverlapPolicy().plan(self._view([long, short], now=t)).prefill
+            for t in range(1, 9)
+        ]
+        assert picks[3] is long and picks[7] is long  # now = 4, 8
+        assert all(p is short for i, p in enumerate(picks) if (i + 1) % 4)
