@@ -26,6 +26,7 @@ def main() -> None:
         fig11_online,
         fig12_grouped,
         fig_overlap,
+        fig_pipeline,
         fig_prefill,
     )
 
@@ -38,6 +39,7 @@ def main() -> None:
         ("fig11+table5", fig11_online.run),
         ("fig12", fig12_grouped.run),
         ("fig_overlap", fig_overlap.run),
+        ("fig_pipeline", fig_pipeline.run),
         ("fig_prefill", fig_prefill.run),
     ]
     print("name,us_per_call,derived")

@@ -28,7 +28,7 @@ bit-for-bit.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.serving.request import InflightVerify, Request, State
 
@@ -39,17 +39,42 @@ def candidates_per_window(window: int) -> int:
     return window - 1
 
 
-def ready_for_verify(req: Request, window: int) -> bool:
+#: EMA step for per-request acceptance telemetry.  High on purpose: the
+#: adaptive scheduler must react within a verdict or two of a request
+#: entering (or leaving) a high-flip regime.
+ACCEPT_EMA_ALPHA = 0.5
+
+
+def _update_acceptance(req: Request, n_match: int, n_submitted: int) -> None:
+    """Fold one verdict into the request's acceptance EMA.  The sample is
+    the accepted fraction of the *submitted* candidates — a partial
+    (eager) window counts the same as a full one, so the signal tracks
+    flip probability, not window pacing."""
+    if n_submitted <= 0:
+        return
+    frac = min(n_match, n_submitted) / n_submitted
+    req.accept_ema += ACCEPT_EMA_ALPHA * (frac - req.accept_ema)
+
+
+def ready_for_verify(
+    req: Request, window: int, *, min_candidates: Optional[int] = None
+) -> bool:
+    """A window is ready once full (W-1 candidates) or once the request is
+    done decoding.  ``min_candidates`` lowers the bar: the adaptive
+    scheduler verifies high-flip requests *eagerly* with partial windows —
+    the fixed-shape (G, W) verify pass pads short rows, and the committed
+    stream is a prefix-stable reference sequence, so window pacing moves
+    only throughput, never tokens."""
     if not req.sampling.is_deterministic:
         return False
     if req.state == State.FINISHED or not req.candidates:
         return False
     if req.inflight is not None:
         return False  # one outstanding window per request
-    return (
-        len(req.candidates) >= candidates_per_window(window)
-        or req.done_decoding()
-    )
+    threshold = candidates_per_window(window)
+    if min_candidates is not None:
+        threshold = max(1, min(min_candidates, threshold))
+    return len(req.candidates) >= threshold or req.done_decoding()
 
 
 def mark_window_state(req: Request, window: int) -> None:
@@ -88,6 +113,7 @@ def apply_verify_result(
 ) -> None:
     """Commit matching prefix + the verifier token; roll back the rest."""
     cand_len = len(req.candidates)
+    _update_acceptance(req, n_match, cand_len)
     n_match = min(n_match, cand_len)
     accepted = req.candidates[:n_match]
     rejected = cand_len - n_match
@@ -118,18 +144,22 @@ def _clamp_budget(req: Request) -> None:
 
 
 def begin_inflight(
-    req: Request, window: int, submitted_iter: int, ready_iter: int
+    req: Request, window: int, submitted_at: float, ready_at: float
 ) -> InflightVerify:
     """Move the window's candidates out of the speculation buffer and mark
     them as submitted-for-verification.  The request may keep decoding —
     fresh candidates append to the (now shorter) ``req.candidates`` and are
-    positioned *after* the in-flight window."""
+    positioned *after* the in-flight window.
+
+    ``submitted_at``/``ready_at`` are stream-clock times (see
+    ``serving.streams``): the verdict lands at the first iteration whose
+    main-stream clock reaches ``ready_at``."""
     assert req.inflight is None, "one outstanding verify window per request"
     k = candidates_per_window(window)
     submitted = req.candidates[:k]
     req.candidates = req.candidates[k:]
     req.inflight = InflightVerify(
-        cands=submitted, submitted_iter=submitted_iter, ready_iter=ready_iter
+        cands=submitted, submitted_at=submitted_at, ready_at=ready_at
     )
     # window is out: the request resumes speculating unless its budget is
     # already covered by outstanding speculation (then it awaits the verdict)
@@ -155,6 +185,7 @@ def apply_inflight_result(req: Request, window: int = 0) -> None:
     fl = req.inflight
     assert fl is not None and fl.n_match >= 0, "no completed in-flight verify"
     k = len(fl.cands)
+    _update_acceptance(req, fl.n_match, k)
     n_match = min(fl.n_match, k)
     rejected = k - n_match
 

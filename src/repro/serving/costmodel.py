@@ -20,22 +20,34 @@ raises utilisation exactly as on GPU (it exists to fill SMs/MXU at low
 occupancy); the batch-invariant kernel is pinned to splits=1 and eats the
 low-utilisation penalty — this is the mechanism behind paper Fig. 5.
 
-Overlapped iterations (scheduler ``OverlapPolicy``): a composite ``overlap``
-event carries its decode and verify sub-events — and, under chunked
-prefill, a ``prefill_chunk`` sub-event for the co-scheduled prefill lane.
-No single pass fills the chip (decode is HBM-bound at small batch, the
-verify window and a prefill chunk are short fixed-shape passes), so running
-them concurrently hides most of the shorter passes:
-t = max(ts) + ``overlap_serial_frac`` * sum(rest), the serial fraction
-modeling shared-resource contention (HBM bandwidth, scheduler gaps).  This
-is always <= the serial sum — the pause policy's cost — and >= the max,
-i.e. overlap is never modeled as free.
+Per-stream time accounting (the dual-clock runtime, ``serving.streams``):
+the engine executes on two streams — decode and prefill passes serialize
+on the **main** stream (separate kernel launches, one queue), deferred
+verification rides the **verify** stream.  ``simulate``/``simulate_streams``
+replay an event log through exactly that model: a composite ``overlap``
+event's decode + prefill sub-passes are charged serially on the main
+clock, its verify sub-pass starts at max(iteration start, previous verify
+completion) on the verify clock, and the portion of the verify pass that
+overlaps the iteration's main-stream work slows the main stream by
+``stream_contention * overlap`` (shared HBM).  A verify pass *longer* than
+its launch iteration no longer blocks anything — its tail spills into the
+verify stream's backlog and only delays when the verdict lands.  Total
+simulated time is the two-stream makespan.  Sync (pause-style) verify
+events — standalone ``verify`` events without ``deferred: True`` — block
+the main stream for their full duration, exactly the prototype's cost.
+
+``step_time`` on a single composite event keeps a memoryless
+approximation of the same rule (no cross-event backlog):
+t = max(t_main, t_verify) + ``stream_contention`` * min(t_main, t_verify),
+where t_main is the decode + prefill serial sum.  This is always <= the
+serial sum — the pause policy's cost — and >= the max, i.e. overlap is
+never modeled as free.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List
+from typing import Any, Dict, Iterable, List, Tuple
 
 from repro.models.base import ModelConfig
 
@@ -53,9 +65,16 @@ class Hardware:
     # a few in flight)
     sat_rows: int = 256
     dtype_bytes: int = 2  # bf16 weights/KV at serving time
-    # fraction of the shorter pass NOT hidden when verify overlaps decode
-    # (contention on HBM + inter-pass scheduling gaps)
+    # fraction of a concurrent verify-stream pass NOT hidden behind the
+    # main stream's work (contention on HBM + inter-pass scheduling gaps);
+    # 0 = ideal dual-issue, 1 = serial execution
     overlap_serial_frac: float = 0.35
+
+    @property
+    def stream_contention(self) -> float:
+        """Cross-stream interference coefficient (alias of the historical
+        ``overlap_serial_frac`` field — same physics, stream vocabulary)."""
+        return self.overlap_serial_frac
 
 
 V5E = Hardware()
@@ -122,16 +141,15 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
     """Simulated seconds for one engine event on one chip."""
     kind = ev["kind"]
     if kind == "overlap":
-        # composite iteration: up to three concurrent passes (decode,
-        # verify launch, prefill chunk).  3-way generalization of the
-        # 2-way rule: the longest pass hides the rest up to a shared-
-        # resource serial fraction — never free, never worse than serial.
-        sub = [dict(ev[k]) for k in ("decode", "verify", "prefill") if k in ev]
-        if ev.get("invariant"):
-            for s in sub:
-                s["invariant"] = True
-        ts = sorted((step_time(cfg, s, hw) for s in sub), reverse=True)
-        return ts[0] + hw.overlap_serial_frac * sum(ts[1:])
+        # composite iteration, per-stream rule: decode + prefill serialize
+        # on the main stream (two launches, one queue); the verify pass
+        # rides the second stream concurrently, derated by the cross-
+        # stream contention coefficient.  Memoryless single-event view —
+        # ``simulate_streams`` carries verify tails across iterations.
+        t_main, t_verify = _lane_times(cfg, ev, hw)
+        return max(t_main, t_verify) + hw.stream_contention * min(
+            t_main, t_verify
+        )
 
     pbytes = cfg.active_param_count() * hw.dtype_bytes
     kvb = kv_bytes_per_token(cfg, hw.dtype_bytes)
@@ -183,21 +201,111 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
     return max(t_compute, t_memory)
 
 
+def _lane_times(
+    cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware
+) -> Tuple[float, float]:
+    """(main-stream seconds, verify-stream seconds) for one composite
+    ``overlap`` event: decode + prefill serialize on the main stream, the
+    verify sub-pass is the verify stream's work."""
+    sub = {k: dict(ev[k]) for k in ("decode", "verify", "prefill") if k in ev}
+    if ev.get("invariant"):
+        for s in sub.values():
+            s["invariant"] = True
+    t_main = sum(
+        step_time(cfg, s, hw) for k, s in sub.items() if k != "verify"
+    )
+    t_verify = step_time(cfg, sub["verify"], hw) if "verify" in sub else 0.0
+    return t_main, t_verify
+
+
+@dataclasses.dataclass
+class StreamSim:
+    """Two-stream replay result: ``total_s`` is the makespan, the busy
+    fields are per-stream work, ``verify_occupancy`` is the verify
+    stream's utilization over the makespan, and ``breakdown`` holds leaf
+    per-kind device seconds (informational — their sum exceeds the
+    makespan exactly when streams overlapped)."""
+
+    total_s: float
+    main_busy_s: float
+    verify_busy_s: float
+    verify_occupancy: float
+    breakdown: Dict[str, float]
+
+
+def simulate_streams(
+    cfg: ModelConfig, events: Iterable[Dict[str, Any]], hw: Hardware = V5E,
+    *, invariant_mode: bool = False,
+) -> StreamSim:
+    """Replay an event log through genuine two-stream time accounting.
+
+    The replay drives the SAME :class:`streams.DualClockRuntime` the
+    engine's costed clock runs on — one implementation of the physics:
+    main-stream passes (decode, prefill chunks — and sync verify, which
+    blocks everything) serialize on the main clock; a deferred verify pass
+    (``deferred: True``, or any verify sub-pass of a composite ``overlap``
+    event) queues on the verify clock, its tail spilling across
+    iterations, and the portion overlapping the launch iteration's
+    main-stream work slows the main clock by ``stream_contention *
+    overlap``.  A verify-only iteration waits out its verdict, exactly as
+    the engine's event-driven skip does.  ``total_s`` is the two-stream
+    makespan.  (Iterations the engine spent fully verdict-gated emit no
+    events and are invisible to any log replay — when the engine itself
+    ran a costed clock, ``engine.runtime.makespan`` is authoritative.)
+    """
+    from repro.serving import streams  # local import: streams is a leaf
+
+    breakdown: Dict[str, float] = {}
+
+    def cost_fn(ev: Dict[str, Any]) -> float:
+        e = dict(ev, invariant=True) if invariant_mode else ev
+        t = step_time(cfg, e, hw)
+        breakdown[ev["kind"]] = breakdown.get(ev["kind"], 0.0) + t
+        return t
+
+    rt = streams.DualClockRuntime(
+        cost_fn, latency=0.0, contention=hw.stream_contention
+    )
+    for ev in events:
+        kind = ev.get("kind")
+        rt.begin_iteration()
+        if kind == "overlap":
+            for k in ("decode", "prefill"):
+                if k in ev:
+                    rt.charge(ev[k])
+            if "verify" in ev:
+                rt.launch_verify(ev["verify"])
+        elif kind == "verify":
+            rt.launch_verify(ev, sync=not ev.get("deferred"))
+        else:
+            rt.charge(ev)
+        rt.end_iteration()
+    total = rt.makespan
+    return StreamSim(
+        total_s=total,
+        main_busy_s=rt.main.busy,
+        verify_busy_s=rt.verify.busy,
+        verify_occupancy=rt.verify.busy / total if total > 0 else 0.0,
+        breakdown=breakdown,
+    )
+
+
 def simulate(
     cfg: ModelConfig, events: Iterable[Dict[str, Any]], hw: Hardware = V5E,
     *, invariant_mode: bool = False,
 ) -> Dict[str, float]:
-    """Total simulated time + per-kind breakdown for an event log."""
-    total = 0.0
-    breakdown: Dict[str, float] = {}
-    for ev in events:
-        ev = dict(ev)
-        if invariant_mode:
-            ev["invariant"] = True
-        t = step_time(cfg, ev, hw)
-        total += t
-        breakdown[ev["kind"]] = breakdown.get(ev["kind"], 0.0) + t
-    return {"total_s": total, **{f"{k}_s": v for k, v in breakdown.items()}}
+    """Stream-accounted total time + leaf per-kind breakdown for an event
+    log.  ``total_s`` is the two-stream makespan (``simulate_streams``);
+    the per-kind entries are device seconds per pass kind, so their sum
+    can exceed ``total_s`` when streams overlapped."""
+    sim = simulate_streams(cfg, events, hw, invariant_mode=invariant_mode)
+    return {
+        "total_s": sim.total_s,
+        "main_busy_s": sim.main_busy_s,
+        "verify_busy_s": sim.verify_busy_s,
+        "verify_occupancy": sim.verify_occupancy,
+        **{f"{k}_s": v for k, v in sim.breakdown.items()},
+    }
 
 
 def throughput_tokens_per_s(

@@ -28,9 +28,14 @@ Every device step goes through a jitted function cached per *shape class*
 (batch size, prompt bucket, window) — recompilation per shape is exactly
 the shape→schedule coupling (O2) the paper builds on.
 
-An event log records (kind, shape metadata, wall time) per step; the
-benchmark harness replays it through the TPU cost model
-(``serving.costmodel``) to derive paper-comparable throughput numbers.
+Time is kept by the dual-clock execution-stream runtime
+(``serving.streams``): decode/prefill passes charge the main stream,
+deferred verification launches on the verify stream, and verdict deadlines
+are continuous (``verify_latency_ms``; the integer ``verify_latency`` is
+the deprecated 1-tick-per-iteration shim).  An event log still records
+(kind, shape metadata, wall time) per step; the benchmark harness replays
+it through the TPU cost model (``serving.costmodel``) to derive
+paper-comparable throughput numbers.
 """
 
 from __future__ import annotations
@@ -53,7 +58,7 @@ from repro.core.determinism import (
 from repro.core.verifier import make_verify_fn
 from repro.models.base import ModelConfig
 from repro.models.transformer import build_cross_cache, forward
-from repro.serving import kv_cache
+from repro.serving import costmodel, kv_cache, streams
 from repro.serving import scheduler as sched
 from repro.serving.request import Request, State
 from repro.serving.sampler import sample_batch, sample_token
@@ -80,7 +85,10 @@ class Engine:
         max_batch: int = 8,
         capacity: Optional[int] = None,
         scheduler: Optional[sched.SchedulePolicy] = None,
-        verify_latency: int = 1,  # iterations until an overlapped verdict lands
+        verify_latency: int = 1,  # DEPRECATED: iterations until a verdict lands
+        verify_latency_ms: Optional[float] = None,  # continuous verdict latency
+        cost_cfg: Optional[ModelConfig] = None,  # config the stream clocks cost at
+        hw: costmodel.Hardware = costmodel.V5E,
         prefill_chunk: int = 0,  # tokens per prefill chunk; 0 = exclusive
     ):
         self.cfg = cfg
@@ -104,7 +112,21 @@ class Engine:
 
         self.scheduler = scheduler if scheduler is not None else sched.default_policy(mode)
         assert verify_latency >= 1, "a verdict cannot land before its launch"
-        self.verify_latency = verify_latency
+        self.verify_latency = verify_latency  # deprecated: logical-shim ticks
+        assert verify_latency_ms is None or verify_latency_ms >= 0.0
+        self.verify_latency_ms = verify_latency_ms
+        self.hw = hw
+        # dual-clock execution-stream runtime (serving.streams).  Default is
+        # the logical shim (1 tick per iteration, verdicts verify_latency
+        # ticks after launch — the pre-stream behaviour, bit for bit).
+        # Passing verify_latency_ms — or calling bind_cost_model(), which
+        # run_online() does — switches to the costed clock: continuous
+        # main/verify stream times from the cost model, verify passes
+        # queueing on their own stream, verdicts landing latency_ms after
+        # the pass completes.
+        self.runtime = streams.DualClockRuntime(latency=float(verify_latency))
+        if verify_latency_ms is not None:
+            self.bind_cost_model(cost_cfg or cfg, hw)
         assert prefill_chunk >= 0, "prefill_chunk must be >= 0 (0 = exclusive)"
         self.prefill_chunk = int(prefill_chunk)
         # chunked prefill generalizes the sliding-window chunk path to all
@@ -120,6 +142,42 @@ class Engine:
         self._fns: Dict[Any, Callable] = {}
         self._verify_fn = make_verify_fn(cfg, group, window)
         self._now = 0  # logical iteration counter
+
+    # ------------------------------------------------------------------
+    # stream clocks
+    # ------------------------------------------------------------------
+
+    def bind_cost_model(
+        self,
+        cost_cfg: ModelConfig,
+        hw: Optional[costmodel.Hardware] = None,
+        *,
+        invariant: bool = False,
+    ) -> None:
+        """Switch the runtime to a costed clock: stream times come from the
+        TPU cost model evaluated at ``cost_cfg``'s scale (benchmarks cost
+        the full model while scheduling the reduced one).  Must happen
+        before the first step — rebinding mid-run would tear the clock.
+
+        Verdict latency under a costed clock is ``verify_latency_ms``
+        (default 0: a verdict is visible as soon as the verify-stream pass
+        completes).  The deprecated integer ``verify_latency`` has no
+        meaning in seconds and is ignored here beyond its >= 1 contract.
+        """
+        assert getattr(self, "_now", 0) == 0, "bind the clock before stepping"
+        hw = hw or self.hw
+        self.hw = hw
+
+        def cost_fn(ev: Dict[str, Any]) -> float:
+            if invariant:
+                ev = dict(ev, invariant=True)
+            return costmodel.step_time(cost_cfg, ev, hw)
+
+        self.runtime = streams.DualClockRuntime(
+            cost_fn,
+            latency=(self.verify_latency_ms or 0.0) / 1e3,
+            contention=hw.stream_contention,
+        )
 
     # ------------------------------------------------------------------
     # jitted step builders (cached per shape class)
@@ -420,10 +478,12 @@ class Engine:
             self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
         req.committed.append(int(tok))  # T0: deterministic by construction
         req.prefill_time = self._now
-        self.events.append({
+        ev = {
             "kind": "prefill", "tokens": req.prompt_len + (cfg.num_prefix_embeds or 0),
             "padded": P + (cfg.num_prefix_embeds or 0), "wall": wall, "iter": self._now,
-        })
+        }
+        self.runtime.charge(ev)
+        self.events.append(ev)
 
     def _prefill_sliding(self, req: Request) -> None:
         """Exclusive chunked prefill for sliding-window archs (<= window per
@@ -435,11 +495,13 @@ class Engine:
         wall = 0.0
         while req.prefill_pos < req.prefill_total:
             wall += self._prefill_advance(req, W)["wall"]
-        self.events.append({
+        ev = {
             "kind": "prefill", "tokens": req.prompt_len,
             "padded": ((req.prompt_len + W - 1) // W) * W, "wall": wall,
             "iter": self._now,
-        })
+        }
+        self.runtime.charge(ev)
+        self.events.append(ev)
 
     def _view(self) -> sched.SchedulerView:
         """Snapshot handed to the schedule policy each iteration."""
@@ -456,6 +518,12 @@ class Engine:
             prefilling=tuple(
                 r for r in self.running if r.state is State.PREFILLING
             ),
+            now_time=self.runtime.now,
+            verify_inflight=sum(
+                1 for r in self.running if r.inflight is not None
+            ),
+            verify_backlog=self.runtime.verify_backlog,
+            acceptance={r.rid: r.accept_ema for r in self.running},
         )
 
     # ------------------------------------------------------------------
@@ -507,14 +575,17 @@ class Engine:
     ) -> Dict[str, Any]:
         """Run one grouped verification pass.
 
-        ``defer=False`` (pause policy): the verdict is applied synchronously,
-        exactly the seed behaviour.  ``defer=True`` (overlap policy): the
+        ``defer=False`` (pause policy / an AdaptivePolicy sync plan): the
+        verdict is applied synchronously, exactly the seed behaviour; the
+        pass blocks the main stream.  ``defer=True`` (overlap policy): the
         submitted candidates move to per-request in-flight state and the
-        verdict lands at the start of an iteration ``verify_latency`` steps
-        later — the device pass still executes eagerly (host-sequential
-        simulation of an async verify stream), so its KV/state repair is in
-        place before any later cache read, but the *protocol* result
-        arrives with the modeled latency.
+        pass is launched on the verify *stream* — its verdict becomes
+        visible when the stream completes the pass plus the modeled extra
+        latency (``verify_latency_ms``; ``verify_latency`` ticks under the
+        logical shim).  The device pass still executes eagerly
+        (host-sequential simulation of an async verify stream), so its
+        KV/state repair is in place before any later cache read, but the
+        *protocol* result arrives at the stream-clock deadline.
         """
         G, W = self.group, self.window
         rows = group[:G]
@@ -558,23 +629,27 @@ class Engine:
         wall = time.perf_counter() - t0
         n_match = [int(n) for n in n_match]
         commit_tok = [int(t) for t in commit_tok]
-        if defer:
-            # verdict usable at the START of iteration now + latency
-            ready_iter = self._now + self.verify_latency
-            for r, n, t in zip(rows, n_match, commit_tok):
-                fl = dvr.begin_inflight(r, W, self._now, ready_iter)
-                fl.n_match, fl.commit_tok = n, t
-        else:
-            for r, n, t in zip(rows, n_match, commit_tok):
-                dvr.apply_verify_result(r, n, t, window=W)
-        return {
+        ev = {
             "kind": "verify", "group": len(rows), "window": W, "pad_rows": n_pad,
             "ctx_sum": sum(starts) + W * G, "wall": wall, "iter": self._now,
             # requests that could decode this iteration — under the pause
             # policy these are the requests the verify pass stalls; under
             # overlap they ride in the composite event's decode batch
             "rids": [r.rid for r in rows], "n_decodable": n_decodable,
+            # stream assignment for per-stream time accounting: a deferred
+            # pass rides the verify stream; a sync pass blocks the main one
+            "deferred": defer,
         }
+        ready_at = self.runtime.launch_verify(ev, sync=not defer)
+        if defer:
+            submitted_at = self.runtime.now
+            for r, n, t in zip(rows, n_match, commit_tok):
+                fl = dvr.begin_inflight(r, W, submitted_at, ready_at)
+                fl.n_match, fl.commit_tok = n, t
+        else:
+            for r, n, t in zip(rows, n_match, commit_tok):
+                dvr.apply_verify_result(r, n, t, window=W)
+        return ev
 
     def _retire(self) -> None:
         done = [r for r in self.running if r.finished() or (
@@ -600,23 +675,30 @@ class Engine:
     def step(self) -> bool:
         """One scheduler iteration.  Returns False when fully drained.
 
-        Order within an iteration: land due verdicts, retire, admit, plan,
-        PREFILL chunk, DECODE, then VERIFY launch.  Verdicts land *before*
-        retirement so a request whose final in-flight verdict is due this
-        iteration retires this iteration — not one late (``finish_time``
-        off-by-one, drain one step longer).  Decode-before-verify is a
-        correctness requirement, not taste: the decode of a row being
-        submitted this iteration re-feeds its last candidate, writing
-        fast-path KV at the window's final position — a position the verify
-        replay is about to repair and that no later replay will ever cover
-        again.  Launching the verify afterwards lets its repair win; every
-        later speculative write lands at positions >= the next window
-        start, which the next replay rewrites.  The prefill chunk touches
-        only its own (PREFILLING) slot, so it is order-independent.  An
-        iteration that ran >= 2 passes emits a single composite ``overlap``
-        event so the cost model can charge them as concurrent
-        (``costmodel.step_time``)."""
+        Order within an iteration: advance the stream clock, land due
+        verdicts, retire, admit, plan, PREFILL chunk, DECODE, then VERIFY
+        launch.  Verdicts land *before* retirement so a request whose final
+        in-flight verdict is due this iteration retires this iteration —
+        not one late (``finish_time`` off-by-one, drain one step longer).
+        Decode-before-verify is a correctness requirement, not taste: the
+        decode of a row being submitted this iteration re-feeds its last
+        candidate, writing fast-path KV at the window's final position — a
+        position the verify replay is about to repair and that no later
+        replay will ever cover again.  Launching the verify afterwards lets
+        its repair win; every later speculative write lands at positions >=
+        the next window start, which the next replay rewrites.  The prefill
+        chunk touches only its own (PREFILLING) slot, so it is
+        order-independent.
+
+        Time accounting rides the dual-stream runtime: prefill and decode
+        passes charge the main stream (serial — two launches on one
+        stream), a deferred verify launches on the verify stream
+        (``streams.DualClockRuntime``), and a sync verify (pause policy, or
+        an ``AdaptivePolicy`` demotion) blocks the main stream.  An
+        iteration that ran >= 2 passes still emits a single composite
+        ``overlap`` event for log replay (``costmodel``)."""
         self._now += 1
+        self.runtime.begin_iteration()
         applied = self._apply_due_verdicts()
         self._retire()
         self._admit()
@@ -628,15 +710,19 @@ class Engine:
         pev = dev = vev = None
         if plan.prefill is not None:
             pev = self._prefill_advance(plan.prefill, self._chunk_size())
+            self.runtime.charge(pev)
         if plan.decode:
             batch = [r for r in plan.decode if not r.done_decoding()]
             if batch:
                 dev = self._decode_step(batch)
+                self.runtime.charge(dev)
         if plan.verify:
             vev = self._verify_step(
-                plan.verify, defer=self.scheduler.defers_verify,
+                plan.verify,
+                defer=self.scheduler.defers_verify and not plan.sync_verify,
                 n_decodable=len(sched.decodable(view)),
             )
+        self.runtime.end_iteration()
 
         subs = [("decode", dev), ("verify", vev), ("prefill", pev)]
         present = [(k, ev) for k, ev in subs if ev is not None]
@@ -653,11 +739,17 @@ class Engine:
         return bool(self.running or self.queue)
 
     def _apply_due_verdicts(self) -> bool:
-        """Land in-flight verify results whose modeled latency has elapsed."""
+        """Land in-flight verify results whose stream-clock deadline has
+        been reached (``ready_at <= main-stream now``).  Groups launched at
+        different times may land in the same iteration — and, with a
+        per-launch latency schedule, in inverted launch order; the splice
+        logic is per-request, so landing order never moves a committed
+        token."""
         applied = False
+        now = self.runtime.now
         for r in self.running:
             fl = r.inflight
-            if fl is not None and fl.n_match >= 0 and fl.ready_iter <= self._now:
+            if fl is not None and fl.n_match >= 0 and fl.ready_at <= now:
                 dvr.apply_inflight_result(r, window=self.window)
                 applied = True
         return applied

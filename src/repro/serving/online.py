@@ -1,20 +1,25 @@
-"""Online-inference runner: Poisson arrivals against a simulated TPU clock.
+"""Online-inference runner: Poisson arrivals against the engine's stream clocks.
 
-Drives the real engine (real scheduling, real rollbacks) while advancing a
-simulated clock by the cost model's per-step time — the standard
-discrete-event approach for evaluating serving schedulers without the
-target hardware.  Produces per-request end-to-end latency and TTFT
-(paper Fig. 11 / Table 5).
+Drives the real engine (real scheduling, real rollbacks) in costed-clock
+mode: ``Engine.bind_cost_model`` switches the dual-stream runtime
+(``serving.streams``) to continuous device time, so the discrete-event
+clock IS the engine's main-stream clock — decode/prefill passes advance
+it serially, deferred verification queues on the verify stream and only
+slows the main stream by the modeled cross-stream contention, and verify
+tails longer than their launch iteration spill into the verify stream's
+backlog instead of blocking anything.  Produces per-request end-to-end
+latency and TTFT (paper Fig. 11 / Table 5).
 
-Overlapped iterations (``OverlapPolicy``) arrive as composite ``overlap``
-events; ``costmodel.step_time`` charges them as concurrent (max + a
-contention term), so the clock advances by less than the pause policy's
-decode-then-verify sum — the latency benefit shows up here directly.
+Exhausting ``max_iters`` before the workload drains raises (it used to
+fall out of the loop and silently return truncated latency/TTFT dicts —
+quietly partial benchmark numbers); pass ``on_exhaust="warn"`` to instead
+keep the partial result and get a warning with the unfinished counts.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Tuple
 
 from repro.models.base import ModelConfig
@@ -39,17 +44,18 @@ def run_online(
     hw: costmodel.Hardware = costmodel.V5E,
     invariant_mode: bool = False,
     max_iters: int = 200000,
+    on_exhaust: str = "raise",  # "raise" | "warn"
 ) -> OnlineResult:
+    assert on_exhaust in ("raise", "warn")
+    engine.bind_cost_model(cost_cfg, hw, invariant=invariant_mode)
     pending = sorted(requests, key=lambda p: p[1])
-    clock = 0.0
     arrival: Dict[int, float] = {}
     ttft: Dict[int, float] = {}
     latency: Dict[int, float] = {}
-    n_events = 0
 
     def admit():
         nonlocal pending
-        while pending and pending[0][1] <= clock:
+        while pending and pending[0][1] <= engine.runtime.now:
             req, t = pending.pop(0)
             arrival[req.rid] = t
             engine.submit(req)
@@ -58,14 +64,12 @@ def run_online(
         admit()
         if not pending and not engine.running and not engine.queue:
             break
+        # the runtime's event-driven skip (verdict-gated idle iterations)
+        # must never jump past the next arrival — the main stream is free
+        # to admit and prefill it the moment it lands
+        engine.runtime.skip_horizon = pending[0][1] if pending else None
         progressed = engine.step()
-        new_events = engine.events[n_events:]
-        n_events = len(engine.events)
-        for ev in new_events:
-            ev = dict(ev)
-            if invariant_mode:
-                ev["invariant"] = True
-            clock += costmodel.step_time(cost_cfg, ev, hw)
+        clock = engine.runtime.now
         # first token timestamps (prefill commits T0 synchronously)
         for r in engine.running:
             if r.rid not in ttft and r.committed:
@@ -75,7 +79,20 @@ def run_online(
                 latency[r.rid] = clock - arrival[r.rid]
                 ttft.setdefault(r.rid, clock - arrival[r.rid])
         if not progressed and pending:
-            clock = max(clock, pending[0][1])  # idle until next arrival
+            engine.runtime.idle_until(pending[0][1])  # idle until next arrival
+    # re-check after the loop: a workload that drains on exactly the last
+    # permitted step is complete, not truncated
+    if pending or engine.running or engine.queue:
+        msg = (
+            f"run_online exhausted max_iters={max_iters} before draining: "
+            f"{len(engine.running)} running, {len(engine.queue)} queued, "
+            f"{len(pending)} not yet arrived; latency/TTFT dicts would be "
+            f"partial ({len(latency)}/{len(requests)} finished)"
+        )
+        if on_exhaust == "raise":
+            raise RuntimeError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
+    clock = engine.runtime.now
     # drain bookkeeping for anything that finished on the last step
     for r in engine.finished:
         latency.setdefault(r.rid, clock - arrival[r.rid])

@@ -30,11 +30,16 @@ class InflightVerify:
     semantics.  ``n_match``/``commit_tok`` are filled in when the device
     pass completes (< 0 means still pending from the protocol's view — the
     discrete-event engine computes them eagerly but *applies* them at
-    ``ready_iter`` to model verification latency)."""
+    ``ready_at`` to model verification latency).
+
+    ``submitted_at``/``ready_at`` are continuous stream-clock times
+    (``serving.streams``): seconds under a costed clock, iteration ticks
+    under the deprecated logical shim.  The verdict lands at the first
+    iteration whose main-stream clock reaches ``ready_at``."""
 
     cands: List[int]
-    submitted_iter: int
-    ready_iter: int
+    submitted_at: float
+    ready_at: float
     n_match: int = -1
     commit_tok: int = -1
 
@@ -68,6 +73,11 @@ class Request:
     candidates: List[int] = dataclasses.field(default_factory=list)
     # window submitted for verification while decoding continues (OverlapPolicy)
     inflight: Optional[InflightVerify] = None
+    # acceptance telemetry: EMA of per-verdict acceptance fraction
+    # (n_match / candidates submitted), updated by core.dvr on every
+    # verdict.  Starts optimistic; AdaptivePolicy reads it to demote
+    # high-flip requests to pause-style verification (and promote back).
+    accept_ema: float = 1.0
     # stats
     num_rollbacks: int = 0
     num_recomputed_tokens: int = 0

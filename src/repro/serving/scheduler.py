@@ -24,12 +24,25 @@ prototype's prefill-stalls-everything semantics chunk by chunk.  A
 per-request fixed chunk schedule is shape-consistent by construction, so
 committed streams are bitwise identical across chunk sizes too.
 
-A policy is a pure function from a :class:`SchedulerView` (what is
-decodable, what is ready to verify) to a :class:`Plan` (what this iteration
-runs).  It decides *scheduling*, never token semantics — the committed
-stream of a deterministic request is the verifier's reference sequence by
-construction, so it is bitwise identical across policies, arrival orders
-and co-batched traffic.  ``tests/test_scheduler.py`` asserts exactly that.
+* ``AdaptivePolicy``     — acceptance-adaptive: runs ``OverlapPolicy``
+  verbatim while speculation is paying off, but watches each request's
+  acceptance EMA (``Request.accept_ema``, updated by ``core.dvr`` on every
+  verdict) and *demotes* requests whose candidates keep flipping to
+  pause-style verification: synchronous verdicts (no in-flight window, no
+  speculation past it — nothing wasted on latency) and *eager* partial
+  windows whose depth scales with the acceptance rate, so a request in a
+  near-constant-rollback regime stops burning W-1 doomed decode
+  iterations per committed token.  Hysteresis (demote below / promote
+  above) keeps it from flapping; a recovered request is promoted back to
+  full overlapped speculation.
+
+A policy maps a :class:`SchedulerView` (what is decodable, what is ready
+to verify, stream occupancy, acceptance telemetry) to a :class:`Plan`
+(what this iteration runs).  It decides *scheduling*, never token
+semantics — the committed stream of a deterministic request is the
+verifier's reference sequence by construction, so it is bitwise identical
+across policies, arrival orders and co-batched traffic.
+``tests/test_scheduler.py`` asserts exactly that.
 
 Recurrent/hybrid archs (``ssm``/``hybrid`` families) cap speculation at one
 window: their fast path advances state irreversibly, so speculating past a
@@ -42,7 +55,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import List, Optional
+from typing import List, Mapping, Optional, Set
 
 from repro.core import dvr
 from repro.core.determinism import Mode
@@ -61,11 +74,24 @@ class SchedulerView:
     speculate_past_inflight: bool
     now: int  # logical iteration counter
     #: iterations until a launched verdict lands (Engine.verify_latency);
-    #: at 1, verdicts land before the same iteration's decode batch runs
+    #: deprecated — under a costed clock deadlines come from the verify
+    #: stream (serving.streams) and --verify-latency-ms
     verify_latency: int = 1
     #: requests mid chunked-prefill (State.PREFILLING), admission order;
     #: empty when the engine runs legacy exclusive prefill (chunk size 0)
     prefilling: tuple = ()
+    #: continuous main-stream clock (seconds under a costed clock,
+    #: iteration ticks under the logical shim)
+    now_time: float = 0.0
+    #: stream occupancy: number of verify windows currently in flight
+    #: (submitted, verdict not yet landed) across all requests
+    verify_inflight: int = 0
+    #: seconds of verify-stream work scheduled past ``now_time`` — how far
+    #: behind the verify stream is running (0 when caught up / logical)
+    verify_backlog: float = 0.0
+    #: per-request acceptance telemetry: rid -> EMA of the accepted
+    #: fraction per verdict (Request.accept_ema); 1.0 before any verdict
+    acceptance: Mapping[int, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +105,10 @@ class Plan:
     decode: List[Request] = dataclasses.field(default_factory=list)
     verify: List[Request] = dataclasses.field(default_factory=list)
     prefill: Optional[Request] = None
+    #: True forces this iteration's verify pass to apply its verdict
+    #: synchronously (pause-style) even under a deferring policy —
+    #: AdaptivePolicy uses it for demoted high-flip requests
+    sync_verify: bool = False
 
     @property
     def overlapped(self) -> bool:
@@ -112,6 +142,23 @@ def verify_ready(view: SchedulerView) -> List[Request]:
     if view.mode != Mode.LLM42:
         return []
     return [r for r in view.running if dvr.ready_for_verify(r, view.window)]
+
+
+def pick_prefill(view: SchedulerView) -> Optional[Request]:
+    """The prefill chunk that rides a co-scheduled iteration, picked
+    shortest-remaining-first — a short prompt's single chunk never queues
+    behind a long prefill (head-of-line blocking; ties break by admission
+    order, stable min).  Every fourth iteration serves the admission-order
+    head instead, so a sustained stream of short arrivals can never starve
+    a long prefill (it advances at least every 4 iterations) while shorts
+    rarely wait more than one extra slot.  Lane order never affects token
+    semantics — per-request prefill numerics are independent of when the
+    chunks run."""
+    if not view.prefilling:
+        return None
+    if view.now % 4 == 0:
+        return view.prefilling[0]
+    return min(view.prefilling, key=lambda r: r.prefill_remaining)
 
 
 class SchedulePolicy(abc.ABC):
@@ -171,9 +218,33 @@ class OverlapPolicy(SchedulePolicy):
     name = "overlap"
     defers_verify = True
 
+    def __init__(self, max_inflight: int = 0):
+        #: cap on concurrently in-flight verify windows (0 = unbounded).
+        #: With a slow verify stream (--verify-latency-ms) every det
+        #: request can end up with a window queued behind the stream's
+        #: backlog; the cap holds further launches until verdicts land —
+        #: the pipelining-depth knob benchmarks/fig_pipeline.py sweeps.
+        self.max_inflight = max_inflight
+
     def plan(self, view: SchedulerView) -> Plan:
-        ready = verify_ready(view)
-        dec = decodable(view)
+        return self._compose(
+            view, verify_ready(view), decodable(view), view.running
+        )
+
+    def _compose(
+        self,
+        view: SchedulerView,
+        ready: List[Request],
+        dec: List[Request],
+        det_pool,
+    ) -> Plan:
+        """Overlap composition over an explicit candidate set.
+
+        ``ready``/``dec`` are the verify-ready and decodable requests this
+        policy may schedule; ``det_pool`` is the set whose deterministic
+        members might still *join* a partial verify group (AdaptivePolicy
+        passes a filtered pool so demoted requests — which will never
+        launch deferred — cannot hold a group open forever)."""
         if ready and len(ready) < view.group and dec:
             ready_set = set(id(r) for r in ready)
             may_join = any(
@@ -183,10 +254,19 @@ class OverlapPolicy(SchedulePolicy):
                 # fill a window) is too far out to hold a ready group for
                 and r.state is not State.PREFILLING
                 and (r.inflight is not None or not r.done_decoding())
-                for r in view.running
+                for r in det_pool
             )
             if may_join:
                 ready = []
+        if self.max_inflight and ready:
+            # depth cap: a launch may only fill the REMAINING room, so the
+            # in-flight window count never exceeds max_inflight (a
+            # pre-launch gate alone would overshoot by up to group-1 —
+            # the launch itself adds up to `group` windows).  Runs after
+            # the group-holding logic: a trimmed partial launch is the
+            # cap's doing, not a group worth waiting to fill.
+            room = self.max_inflight - view.verify_inflight
+            ready = ready[: max(room, 0)]
         if ready and view.speculate_past_inflight:
             # the rows being submitted (the engine takes the first `group`)
             # decode in this very iteration too — their first token past
@@ -198,25 +278,112 @@ class OverlapPolicy(SchedulePolicy):
             for r in ready[: view.group]:
                 if not r.done_decoding():
                     dec.append(r)
-        prefill = None
-        if view.prefilling:
-            # one prefill chunk rides alongside the decode batch and verify
-            # launch, picked shortest-remaining-first — a short prompt's
-            # single chunk never queues behind a long prefill (head-of-line
-            # blocking; ties break by admission order, stable min).  Every
-            # fourth iteration serves the admission-order head instead, so
-            # a sustained stream of short arrivals can never starve a long
-            # prefill (it advances at least every 4 iterations) while
-            # shorts rarely wait more than one extra slot.  Lane order
-            # never affects token semantics — per-request prefill numerics
-            # are independent of when the chunks run.
-            if view.now % 4 == 0:
-                prefill = view.prefilling[0]
-            else:
-                prefill = min(
-                    view.prefilling, key=lambda r: r.prefill_remaining
-                )
-        return Plan(decode=dec, verify=ready, prefill=prefill)
+        return Plan(decode=dec, verify=ready, prefill=pick_prefill(view))
+
+
+class AdaptivePolicy(SchedulePolicy):
+    """Acceptance-adaptive scheduling: overlap while speculation pays,
+    pause-style verification for requests it keeps failing.
+
+    Near-constant rollback is where overlapping loses (fig_overlap
+    ``50pct_stress``): a high-flip request burns W-1 decode iterations
+    filling a window the verifier is about to reject, its in-flight
+    verdict lands a latency late, and everything it speculated past the
+    window is recomputed — the contention term with nothing hidden behind
+    it.  This policy watches the per-request acceptance EMA the view
+    carries and **demotes** a request once its EMA drops below
+    ``demote_below``:
+
+    * its verification turns synchronous and exclusive (the pause
+      prototype's semantics — no in-flight window, no speculation past
+      it, verdict applied in the launch iteration);
+    * its windows shrink to an *eager* depth that scales with the EMA
+      (``max(1, round(ema * (W-1)))``): at near-zero acceptance it
+      submits after a single candidate, so each committed token costs one
+      decode plus its share of a grouped verify pass instead of W-1
+      doomed speculations.  Window pacing is scheduling, not semantics —
+      the committed stream is the same reference sequence at every depth.
+
+    A demoted request whose EMA recovers above ``promote_above`` is
+    promoted back to full overlapped speculation (hysteresis prevents
+    flapping).  While nothing is demoted the policy IS ``OverlapPolicy``
+    — identical plans, identical events — so low-rollback traffic keeps
+    the whole overlap win.
+
+    Note the policy carries per-request hysteresis state (the demoted
+    set), unlike the stateless pause/overlap policies — use one instance
+    per engine."""
+
+    name = "adaptive"
+    defers_verify = True
+
+    def __init__(
+        self,
+        demote_below: float = 0.6,
+        promote_above: float = 0.8,
+        max_inflight: int = 0,
+    ):
+        assert 0.0 < demote_below <= promote_above <= 1.0
+        self.demote_below = demote_below
+        self.promote_above = promote_above
+        self._overlap = OverlapPolicy(max_inflight=max_inflight)
+        self._demoted: Set[int] = set()
+
+    def _update_demotions(self, view: SchedulerView) -> None:
+        alive = set()
+        for r in view.running:
+            if not r.sampling.is_deterministic:
+                continue
+            alive.add(r.rid)
+            ema = view.acceptance.get(r.rid, 1.0)
+            if r.rid in self._demoted:
+                if ema >= self.promote_above:
+                    self._demoted.discard(r.rid)
+            elif ema < self.demote_below:
+                self._demoted.add(r.rid)
+        self._demoted &= alive  # drop retired requests
+
+    def _eager_depth(self, view: SchedulerView, r: Request) -> int:
+        ema = view.acceptance.get(r.rid, 1.0)
+        return max(1, int(round(ema * dvr.candidates_per_window(view.window))))
+
+    def plan(self, view: SchedulerView) -> Plan:
+        self._update_demotions(view)
+        if not self._demoted:
+            return self._overlap.plan(view)
+        demoted = [r for r in view.running if r.rid in self._demoted]
+        dem_ready = [
+            r for r in demoted
+            if dvr.ready_for_verify(
+                r, view.window, min_candidates=self._eager_depth(view, r)
+            )
+        ]
+        dec = decodable(view)
+        dem_decodable = [r for r in dec if r.rid in self._demoted]
+        if dem_ready and (
+            len(dem_ready) >= min(view.group, len(demoted))
+            or not dem_decodable
+        ):
+            # pause-style exclusive verification for the demoted group:
+            # sync verdict, no decode co-scheduled — exactly the
+            # prototype's iteration, so a fully demoted workload
+            # degenerates to PauseDecodePolicy with shallower (cheaper)
+            # windows.  A prefill chunk still rides along: it touches only
+            # its own slot (order-independent) and starving it every sync
+            # iteration would halve a co-resident prompt's prefill rate
+            # at eager depth 1 (sync passes can fire every other
+            # iteration)
+            return Plan(
+                verify=dem_ready[: view.group], sync_verify=True,
+                prefill=pick_prefill(view),
+            )
+        # otherwise: overlap composition for everything else.  Demoted
+        # requests may decode (filling their eager window) but never
+        # launch deferred, and — because they can never join a deferred
+        # group — they are excluded from the group-holding pool.
+        ready = [r for r in verify_ready(view) if r.rid not in self._demoted]
+        det_pool = [r for r in view.running if r.rid not in self._demoted]
+        return self._overlap._compose(view, ready, dec, det_pool)
 
 
 def default_policy(mode: Mode) -> SchedulePolicy:

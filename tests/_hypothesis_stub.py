@@ -39,8 +39,17 @@ def booleans() -> _Strategy:
     return _Strategy(lambda rng: bool(rng.randrange(2)))
 
 
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, max_size)
+        return [elements.example_from(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
 strategies = SimpleNamespace(
-    integers=integers, sampled_from=sampled_from, booleans=booleans
+    integers=integers, sampled_from=sampled_from, booleans=booleans,
+    lists=lists,
 )
 
 _DEFAULT_MAX_EXAMPLES = 10

@@ -2,6 +2,7 @@
 
 import jax
 import jax.numpy as jnp
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dvr
@@ -72,14 +73,71 @@ class TestDVRBookkeeping:
         r4 = _req([10], [20, 30, 40, 50], det=False)
         assert not dvr.ready_for_verify(r4, window=5)
 
+    def test_ready_for_verify_eager_partial_window(self):
+        """min_candidates lowers the readiness bar (AdaptivePolicy's eager
+        verification for demoted requests) but never below one candidate
+        and never above the full window."""
+        r = _req([10], [20], det=True, max_new=100)
+        assert dvr.ready_for_verify(r, window=5, min_candidates=1)
+        assert not dvr.ready_for_verify(r, window=5, min_candidates=2)
+        assert dvr.ready_for_verify(r, window=5, min_candidates=0)  # floor 1
+        full = _req([10], [20, 30, 40, 50], det=True)
+        # min_candidates above W-1 clamps to the window
+        assert dvr.ready_for_verify(full, window=5, min_candidates=99)
+        empty = _req([10], [], det=True)
+        assert not dvr.ready_for_verify(empty, window=5, min_candidates=1)
+
+
+class TestAcceptanceTelemetry:
+    """accept_ema: the per-request acceptance EMA AdaptivePolicy reads."""
+
+    def test_sync_verdict_updates_ema(self):
+        r = _req([10], [20, 30, 40, 50])
+        assert r.accept_ema == 1.0  # optimistic start
+        dvr.apply_verify_result(r, n_match=0, commit_tok=99)
+        assert r.accept_ema == pytest.approx(0.5)  # alpha=0.5, sample 0.0
+
+    def test_inflight_verdict_updates_ema(self):
+        r = _req([10], [20, 30, 40, 50])
+        fl = dvr.begin_inflight(r, window=5, submitted_at=1.0, ready_at=2.0)
+        fl.n_match, fl.commit_tok = 2, 77
+        dvr.apply_inflight_result(r, window=5)
+        assert r.accept_ema == pytest.approx(0.75)  # sample 2/4
+
+    def test_partial_window_counts_submitted_fraction(self):
+        """An eager 1-candidate verdict weighs the same as a full window:
+        the sample is n_match / submitted, so the EMA tracks flip
+        probability, not window pacing."""
+        r = _req([10], [20])
+        dvr.apply_verify_result(r, n_match=1, commit_tok=30)
+        assert r.accept_ema == 1.0  # 1/1 accepted: no decay
+        r2 = _req([10], [20])
+        dvr.apply_verify_result(r2, n_match=0, commit_tok=99)
+        assert r2.accept_ema == pytest.approx(0.5)
+
+    def test_ema_converges_under_constant_rollback(self):
+        r = _req([10], [])
+        for _ in range(6):
+            r.candidates = [20, 30, 40, 50]
+            dvr.apply_verify_result(r, n_match=0, commit_tok=99)
+        assert r.accept_ema < 0.02  # demoted long before this
+
+    def test_recovery_promotes(self):
+        r = _req([10], [])
+        r.accept_ema = 0.1
+        for _ in range(3):
+            r.candidates = [20, 30]
+            dvr.apply_verify_result(r, n_match=2, commit_tok=40)
+        assert r.accept_ema > 0.8  # above the promote threshold
+
 
 class TestInflightVerify:
     """In-flight window bookkeeping (scheduler OverlapPolicy support)."""
 
     def _submit(self, committed, window_cands, past, window=5):
         r = _req(committed, list(window_cands) + list(past))
-        fl = dvr.begin_inflight(r, window=window, submitted_iter=1,
-                                ready_iter=1)
+        fl = dvr.begin_inflight(r, window=window, submitted_at=1,
+                                ready_at=1)
         assert fl.cands == list(window_cands)
         assert r.candidates == list(past)
         return r
@@ -189,19 +247,19 @@ class TestStateMachine:
     def test_begin_inflight_resumes_speculation(self):
         r = _req([10], [20, 30, 40, 50])
         r.state = State.AWAITING_VERIFY
-        dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
         assert r.state is State.RUNNING  # window out: decoding resumes
 
     def test_begin_inflight_with_exhausted_budget_stays_awaiting(self):
         r = _req([10], [20, 30, 40, 50], max_new=5)
         r.state = State.AWAITING_VERIFY
-        dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
         assert r.state is State.AWAITING_VERIFY
 
     def test_inflight_verdict_returns_to_running(self):
         r = _req([10], [20, 30, 40, 50])
         r.state = State.AWAITING_VERIFY
-        fl = dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        fl = dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
         fl.n_match, fl.commit_tok = 4, 60
         dvr.apply_inflight_result(r, window=5)
         assert r.state is State.RUNNING
@@ -212,7 +270,7 @@ class TestStateMachine:
         request still cannot take a fast-path token — it awaits the next
         verify launch, not decoding."""
         r = _req([10], [20, 30, 40, 50, 60, 61], max_new=7)
-        fl = dvr.begin_inflight(r, window=5, submitted_iter=1, ready_iter=2)
+        fl = dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
         fl.n_match, fl.commit_tok = 4, 60  # full match, tail survives
         dvr.apply_inflight_result(r, window=5)
         assert r.committed == [10, 20, 30, 40, 50, 60]

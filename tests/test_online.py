@@ -60,6 +60,36 @@ class TestOnlineRunner:
         assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 3.0
         assert percentile([5.0], 99) == 5.0
 
+    def test_exhausting_max_iters_raises(self, model):
+        """Regression (ISSUE 3 satellite): falling out of the loop at
+        max_iters used to silently return truncated latency/TTFT dicts —
+        quietly partial benchmark numbers.  Now it raises (default) or
+        warns with the unfinished counts."""
+        cfg, params = model
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=4, capacity=128)
+        reqs = _reqs(cfg, 2, max_new=12)
+        with pytest.raises(RuntimeError, match="partial"):
+            run_online(eng, cfg, list(zip(reqs, [0.0, 0.0])), max_iters=3)
+
+    def test_exhausting_max_iters_warn_mode(self, model):
+        cfg, params = model
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=4, capacity=128)
+        reqs = _reqs(cfg, 2, max_new=12)
+        with pytest.warns(RuntimeWarning, match="run_online exhausted"):
+            res = run_online(eng, cfg, list(zip(reqs, [0.0, 0.0])),
+                             max_iters=3, on_exhaust="warn")
+        assert len(res.latencies) < 2  # partial, and flagged as such
+
+    def test_clock_rides_engine_streams(self, model):
+        """The discrete-event clock IS the engine's main-stream clock."""
+        cfg, params = model
+        eng = Engine(cfg, params, mode=Mode.LLM42, window=5, group=2,
+                     max_batch=4, capacity=128)
+        reqs = _reqs(cfg, 3, det_rids={0})
+        res = run_online(eng, cfg, list(zip(reqs, [0.0, 0.1, 0.2])))
+        assert res.total_time == pytest.approx(eng.runtime.now)
+        assert eng.runtime.main.busy > 0.0
+
 
 class TestEngineEdges:
     def test_eos_stops_generation(self, model):

@@ -226,7 +226,11 @@ class TestPrefillCostModel:
             cfg, self._prefill_ev(64, start=512, kind="prefill_chunk"), hw)
         assert late > early
 
-    def test_three_way_overlap_charges_max_plus_contention(self):
+    def test_three_way_overlap_uses_per_stream_rule(self):
+        """Composite iteration cost is per-stream: decode + prefill
+        serialize on the main stream (two launches, one queue), the verify
+        pass rides the second stream derated by the cross-stream
+        contention coefficient."""
         cfg = get_smoke_config("llama3-8b")
         hw = costmodel.V5E
         dev = {"kind": "decode", "batch": 4, "ctx_sum": 200,
@@ -234,17 +238,15 @@ class TestPrefillCostModel:
         vev = {"kind": "verify", "group": 4, "window": 8, "ctx_sum": 400,
                "wall": 0.0, "iter": 1}
         pev = self._prefill_ev(64, start=128, kind="prefill_chunk")
-        parts = sorted(
-            (costmodel.step_time(cfg, e, hw) for e in (dev, vev, pev)),
-            reverse=True,
-        )
+        t_main = sum(costmodel.step_time(cfg, e, hw) for e in (dev, pev))
+        t_v = costmodel.step_time(cfg, vev, hw)
         got = costmodel.step_time(
             cfg, {"kind": "overlap", "decode": dev, "verify": vev,
                   "prefill": pev, "wall": 0.0, "iter": 1}, hw)
         assert got == pytest.approx(
-            parts[0] + hw.overlap_serial_frac * sum(parts[1:])
+            max(t_main, t_v) + hw.stream_contention * min(t_main, t_v)
         )
-        assert parts[0] < got < sum(parts)
+        assert max(t_main, t_v) < got < t_main + t_v
 
     def test_flatten_expands_prefill_sub_event(self):
         pev = self._prefill_ev(8, kind="prefill_chunk")

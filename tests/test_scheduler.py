@@ -5,6 +5,7 @@ are bitwise identical across scheduler policies and arrival interleavings.
 
 import jax
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.core.determinism import Mode, ReductionPolicy
@@ -14,6 +15,7 @@ from repro.serving.costmodel import flatten_events
 from repro.serving.engine import Engine
 from repro.serving.request import Request, SamplingParams
 from repro.serving.scheduler import (
+    AdaptivePolicy,
     OverlapPolicy,
     PauseDecodePolicy,
     Plan,
@@ -85,15 +87,19 @@ def _fake_req(rid, *, det=True, committed=1, cands=0, max_new=100,
     if inflight:
         from repro.serving.request import InflightVerify
 
-        r.inflight = InflightVerify(cands=[7, 8], submitted_iter=0,
-                                    ready_iter=2)
+        r.inflight = InflightVerify(cands=[7, 8], submitted_at=0,
+                                    ready_at=2)
     return r
 
 
-def _view(running, *, window=5, group=2, speculate=True):
+def _view(running, *, window=5, group=2, speculate=True, now=1,
+          verify_inflight=0, acceptance=None):
+    if acceptance is None:
+        acceptance = {r.rid: r.accept_ema for r in running}
     return SchedulerView(
         running=tuple(running), mode=Mode.LLM42, window=window, group=group,
-        speculate_past_inflight=speculate, now=1,
+        speculate_past_inflight=speculate, now=now,
+        verify_inflight=verify_inflight, acceptance=acceptance,
     )
 
 
@@ -150,6 +156,85 @@ class TestPolicyPlans:
         assert not Plan(decode=[_fake_req(0)]).overlapped
         assert Plan(decode=[_fake_req(0)], verify=[_fake_req(1)]).overlapped
 
+    def test_overlap_depth_cap_holds_launches(self):
+        """max_inflight gates new deferred launches while the verify
+        stream is saturated — the pipelining-depth knob."""
+        ready = _fake_req(0, cands=4)
+        nondet = _fake_req(1, det=False)
+        capped = OverlapPolicy(max_inflight=2)
+        held = capped.plan(_view([ready, nondet], verify_inflight=2))
+        assert not held.verify and held.decode  # launch held, decode rides
+        freed = capped.plan(_view([ready, nondet], verify_inflight=1))
+        assert freed.verify
+
+    def test_overlap_depth_cap_never_overshoots(self):
+        """A launch fills only the remaining room: in-flight depth stays
+        <= max_inflight even when a whole group is ready (a pre-launch
+        gate alone would overshoot by up to group-1)."""
+        ready = [_fake_req(0, cands=4), _fake_req(1, cands=4)]
+        capped = OverlapPolicy(max_inflight=2)
+        plan = capped.plan(_view(ready, verify_inflight=1))
+        assert [r.rid for r in plan.verify] == [0]  # room for one, not two
+        full = capped.plan(_view(ready, verify_inflight=0))
+        assert [r.rid for r in full.verify] == [0, 1]
+
+
+class TestAdaptivePolicy:
+    """Acceptance-adaptive demotion/promotion (pure plan logic)."""
+
+    def test_identical_to_overlap_while_acceptance_high(self):
+        reqs = [_fake_req(0, cands=4), _fake_req(1, det=False)]
+        a = AdaptivePolicy().plan(_view(reqs))
+        o = OverlapPolicy().plan(_view(reqs))
+        assert ([r.rid for r in a.decode], [r.rid for r in a.verify]) == (
+            [r.rid for r in o.decode], [r.rid for r in o.verify]
+        )
+        assert not a.sync_verify
+
+    def test_low_acceptance_demotes_to_sync_exclusive(self):
+        r = _fake_req(0, cands=1)  # one candidate: eager depth is enough
+        r.accept_ema = 0.1
+        nondet = _fake_req(1, det=False)
+        plan = AdaptivePolicy().plan(_view([r, nondet]))
+        # pause-style: sync verdict, exclusive iteration
+        assert plan.sync_verify
+        assert [q.rid for q in plan.verify] == [0]
+        assert not plan.decode
+
+    def test_eager_depth_scales_with_acceptance(self):
+        # ema 0.5 at window 5 -> depth 2: one candidate is NOT ready yet
+        r = _fake_req(0, cands=1)
+        r.accept_ema = 0.5
+        pol = AdaptivePolicy()
+        plan = pol.plan(_view([r]))
+        assert not plan.verify and [q.rid for q in plan.decode] == [0]
+        r.candidates.append(201)  # second candidate reaches the depth
+        plan2 = pol.plan(_view([r]))
+        assert plan2.sync_verify and [q.rid for q in plan2.verify] == [0]
+
+    def test_hysteresis_promotes_back(self):
+        r = _fake_req(0, cands=4)
+        r.accept_ema = 0.1
+        pol = AdaptivePolicy(demote_below=0.6, promote_above=0.8)
+        assert pol.plan(_view([r])).sync_verify
+        r.accept_ema = 0.7  # between the thresholds: stays demoted
+        assert pol.plan(_view([r])).sync_verify
+        r.accept_ema = 0.9  # recovered: promoted to overlapped verification
+        plan = pol.plan(_view([r]))
+        assert not plan.sync_verify and plan.verify
+
+    def test_demoted_request_cannot_hold_a_group_open(self):
+        """A partial deferred group must not wait for a demoted request —
+        it will never join a deferred launch."""
+        ready = _fake_req(0, cands=4)
+        demoted = _fake_req(1, cands=0)
+        demoted.accept_ema = 0.1
+        plan = AdaptivePolicy().plan(_view([ready, demoted], group=3))
+        # ready launches deferred (group not held); demoted decodes along
+        assert [r.rid for r in plan.verify] == [0]
+        assert not plan.sync_verify
+        assert 1 in [r.rid for r in plan.decode]
+
 
 # ----------------------------------------------------------------------
 # engine integration: determinism across policies / arrival orders
@@ -187,6 +272,43 @@ class TestCrossPolicyDeterminism:
             got, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2], det),
                           scheduler=OverlapPolicy(), verify_latency=latency)
             assert got[0].committed == base[0].committed, latency
+
+    def test_adaptive_policy_agrees_bitwise(self, model):
+        """AdaptivePolicy reschedules (demotions, eager partial windows,
+        sync verdicts) but never moves a committed token — under the
+        drifty policy it WILL demote, so this exercises the demoted path."""
+        cfg, params = model
+        det = {0, 2}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                       scheduler=PauseDecodePolicy())
+        got, eng = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                        scheduler=AdaptivePolicy())
+        for rid in det:
+            assert got[rid].committed == base[rid].committed
+        # the drifty bench policy flips constantly: demotion must trigger
+        assert eng.scheduler._demoted or all(
+            r.accept_ema > 0.6 for r in got.values()
+        )
+
+    def test_costed_clock_agrees_bitwise(self, model):
+        """The continuous (costed) stream clock changes when verdicts land,
+        not what they say: committed streams match the logical-shim runs
+        across verify latencies and depth caps."""
+        cfg, params = model
+        det = {0, 2}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                       scheduler=PauseDecodePolicy())
+        for kw in (
+            dict(scheduler=OverlapPolicy(), verify_latency_ms=0.0),
+            dict(scheduler=OverlapPolicy(), verify_latency_ms=20.0),
+            dict(scheduler=OverlapPolicy(max_inflight=1),
+                 verify_latency_ms=20.0),
+            dict(scheduler=AdaptivePolicy(), verify_latency_ms=20.0),
+        ):
+            got, eng = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det), **kw)
+            for rid in det:
+                assert got[rid].committed == base[rid].committed, kw
+            assert eng.runtime.makespan > 0.0
 
     def test_stochastic_sampling_unaffected_by_policy(self, model):
         cfg, params = model
@@ -255,6 +377,51 @@ class TestVerdictOrdering:
         # device pass and the request retires in that same iteration
         assert r.finish_time == last_ev_iter + 1
         assert eng._now == last_ev_iter + 1  # no dead drain iterations
+
+    def test_out_of_order_verdict_landing_is_bitwise_identical(self, model):
+        """Property (ISSUE 3): verify groups launched at different times
+        whose verdicts land in the same iteration — or in INVERTED launch
+        order — must commit identical streams.  A per-launch latency
+        schedule forces the inversions deterministically."""
+        cfg, params = model
+        det = {0, 1, 2}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                       scheduler=PauseDecodePolicy())
+        # group=1 => every request launches its own verify group, so the
+        # schedule staggers landings ACROSS concurrently-running requests
+        for schedule in ([5, 1, 4, 1], [7, 1, 1, 5, 1], [2, 2, 2],
+                         [9, 1, 8, 1, 7, 1]):
+            eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY,
+                         window=5, group=1, max_batch=8, capacity=256,
+                         scheduler=OverlapPolicy())
+            eng.runtime.latency_schedule = [float(x) for x in schedule]
+            for r in _reqs(cfg, [0, 1, 2, 3], det):
+                eng.submit(r)
+            got = {r.rid: r for r in eng.run()}
+            for rid in det:
+                assert got[rid].committed == base[rid].committed, schedule
+
+    _base_cache = {}
+
+    @settings(max_examples=4, deadline=None)
+    @given(schedule=st.lists(st.integers(1, 9), min_size=2, max_size=10))
+    def test_random_latency_schedules_never_move_tokens(self, model, schedule):
+        """Hypothesis sweep over latency schedules (falls back to the
+        deterministic example sweep without hypothesis installed)."""
+        cfg, params = model
+        if "base" not in self._base_cache:  # one baseline run per session
+            self._base_cache["base"], _ = _run(
+                cfg, params, _reqs(cfg, [0, 1], {0}, max_new=10),
+                scheduler=PauseDecodePolicy())
+        base = self._base_cache["base"]
+        eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
+                     group=1, max_batch=8, capacity=256,
+                     scheduler=OverlapPolicy())
+        eng.runtime.latency_schedule = [float(x) for x in schedule]
+        for r in _reqs(cfg, [0, 1], {0}, max_new=10):
+            eng.submit(r)
+        got = {r.rid: r for r in eng.run()}
+        assert got[0].committed == base[0].committed, schedule
 
 
 class TestNoIdleGuarantee:

@@ -1,0 +1,198 @@
+"""Unit tests for the dual-clock execution-stream runtime (host logic).
+
+The stream abstraction decides only *when* things happen — the committed-
+stream invariance across clock modes is asserted in test_scheduler.py; here
+we pin the time semantics themselves: in-order launch, queueing, the
+contention rule, the logical shim's tick-equivalence, and event-driven
+skipping.
+"""
+
+import pytest
+
+from repro.serving.streams import DualClockRuntime, EventQueue, ExecStream
+
+
+class TestExecStream:
+    def test_launch_is_in_order(self):
+        s = ExecStream("main")
+        a = s.launch(2.0)
+        b = s.launch(3.0)
+        assert a == (0.0, 2.0)
+        assert b == (2.0, 5.0)  # queues behind the first launch
+        assert s.now == 5.0
+        assert s.busy == 5.0
+
+    def test_not_before_delays_start(self):
+        s = ExecStream("verify")
+        start, finish = s.launch(1.0, not_before=4.0)
+        assert (start, finish) == (4.0, 5.0)
+
+    def test_wait_idles_without_busy(self):
+        s = ExecStream("main")
+        s.launch(1.0)
+        s.wait(10.0)
+        assert s.now == 10.0
+        assert s.busy == 1.0
+        s.wait(3.0)  # no-op: frontier already past
+        assert s.now == 10.0
+
+    def test_occupancy(self):
+        s = ExecStream("verify")
+        s.launch(2.0)
+        s.wait(8.0)
+        assert s.occupancy(8.0) == pytest.approx(0.25)
+        assert s.occupancy(0.0) == 0.0
+
+
+class TestEventQueue:
+    def test_pop_due_orders_by_time_then_push_order(self):
+        q = EventQueue()
+        q.push(5.0, "verdict", "late")
+        q.push(2.0, "verdict", "a")
+        q.push(2.0, "verdict", "b")
+        due = q.pop_due(3.0)
+        assert [e.payload for e in due] == ["a", "b"]  # same-time: push order
+        assert len(q) == 1
+        assert q.peek_time() == 5.0
+
+    def test_empty_peek(self):
+        assert EventQueue().peek_time() is None
+
+
+class TestLogicalShim:
+    """cost_fn=None reproduces the old integer verify_latency semantics."""
+
+    def test_one_tick_per_iteration(self):
+        rt = DualClockRuntime(latency=2.0)
+        assert rt.logical
+        assert rt.begin_iteration() == 1.0
+        rt.charge({"kind": "decode"})  # charges are free ticks-wise
+        assert rt.begin_iteration() == 2.0
+
+    def test_verdict_ready_latency_ticks_after_launch(self):
+        rt = DualClockRuntime(latency=2.0)
+        rt.begin_iteration()  # now = 1
+        ready = rt.launch_verify({"kind": "verify"})
+        assert ready == 3.0  # lands at the start of iteration 3
+
+    def test_latency_schedule_overrides_per_launch(self):
+        rt = DualClockRuntime(latency=1.0)
+        rt.latency_schedule = [3.0, 1.0]
+        rt.begin_iteration()
+        first = rt.launch_verify({"kind": "verify"})
+        rt.begin_iteration()
+        second = rt.launch_verify({"kind": "verify"})
+        rt.begin_iteration()
+        third = rt.launch_verify({"kind": "verify"})  # past schedule: default
+        # second lands BEFORE first despite launching later — out of order
+        assert (first, second, third) == (4.0, 3.0, 4.0)
+
+
+class TestCostedClock:
+    def _rt(self, costs, latency=0.0, contention=0.5):
+        return DualClockRuntime(
+            lambda ev: costs[ev["kind"]], latency=latency,
+            contention=contention,
+        )
+
+    def test_main_passes_serialize(self):
+        rt = self._rt({"decode": 2.0, "prefill_chunk": 1.0})
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        rt.charge({"kind": "prefill_chunk"})
+        assert rt.now == 3.0  # one stream, two launches: serial
+        assert rt.main.busy == 3.0
+
+    def test_deferred_verify_rides_second_stream_with_contention(self):
+        rt = self._rt({"decode": 2.0, "verify": 1.0})
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        ready = rt.launch_verify({"kind": "verify"})
+        # verify [0, 1] fully overlaps decode [0, 2]: main slips by c*1
+        assert rt.now == pytest.approx(2.5)
+        assert ready == pytest.approx(1.0)  # completion + 0 extra latency
+        assert rt.verify.busy == 1.0
+
+    def test_verify_tail_spills_into_backlog_not_main(self):
+        rt = self._rt({"decode": 1.0, "verify": 5.0})
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        ready = rt.launch_verify({"kind": "verify"})
+        # only the overlapped first second slows main; the 4s tail rides
+        # the verify stream (old composite model would block ~5s here)
+        assert rt.now == pytest.approx(1.5)
+        assert ready == pytest.approx(5.0)
+        assert rt.verify_backlog == pytest.approx(3.5)
+        assert rt.makespan == pytest.approx(5.0)
+
+    def test_verify_passes_queue_on_their_stream(self):
+        rt = self._rt({"verify": 3.0, "decode": 1.0}, contention=0.0)
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        first = rt.launch_verify({"kind": "verify"})
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        second = rt.launch_verify({"kind": "verify"})
+        # second launch cannot start before the first completes: genuine
+        # stream occupancy, verdicts 3s apart however fast main runs
+        assert first == pytest.approx(3.0)
+        assert second == pytest.approx(6.0)
+
+    def test_sync_verify_blocks_main(self):
+        rt = self._rt({"verify": 3.0})
+        rt.begin_iteration()
+        rt.launch_verify({"kind": "verify"}, sync=True)
+        assert rt.now == pytest.approx(3.0)  # exclusive: main waited
+        assert rt.verify.busy == 3.0  # occupancy sees sync passes too
+
+    def test_extra_latency_delays_verdict_only(self):
+        rt = self._rt({"decode": 1.0, "verify": 1.0}, latency=10.0,
+                      contention=0.0)
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        ready = rt.launch_verify({"kind": "verify"})
+        assert ready == pytest.approx(11.0)
+        assert rt.now == pytest.approx(1.0)  # latency is not stream work
+
+    def test_idle_iteration_skips_to_earliest_deadline(self):
+        rt = self._rt({"verify": 1.0, "decode": 1.0}, latency=7.0,
+                      contention=0.0)
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        ready = rt.launch_verify({"kind": "verify"})
+        rt.begin_iteration()  # nothing decodable: no main work
+        rt.end_iteration()
+        assert rt.now == pytest.approx(ready)  # event-driven skip
+
+    def test_skip_never_jumps_past_the_horizon(self):
+        """An arrival during a verdict-gated idle window must be admitted
+        at its arrival time, not at the verdict deadline."""
+        rt = self._rt({"verify": 1.0, "decode": 1.0}, latency=7.0,
+                      contention=0.0)
+        rt.begin_iteration()
+        rt.charge({"kind": "decode"})
+        ready = rt.launch_verify({"kind": "verify"})
+        rt.skip_horizon = 3.0  # next request arrives at t=3
+        rt.begin_iteration()
+        rt.end_iteration()
+        assert rt.now == pytest.approx(3.0)  # stopped at the arrival
+        rt.skip_horizon = None
+        rt.begin_iteration()
+        rt.end_iteration()
+        assert rt.now == pytest.approx(ready)  # then on to the deadline
+
+    def test_stale_horizon_does_not_pin_the_clock(self):
+        rt = self._rt({"verify": 1.0}, latency=5.0, contention=0.0)
+        rt.begin_iteration()
+        ready = rt.launch_verify({"kind": "verify"})
+        rt.main.wait(2.0)
+        rt.skip_horizon = 1.0  # already in the past: must be ignored
+        rt.begin_iteration()
+        rt.end_iteration()
+        assert rt.now == pytest.approx(ready)
+
+    def test_idle_until(self):
+        rt = self._rt({"decode": 1.0})
+        rt.idle_until(4.0)
+        assert rt.now == 4.0
+        assert rt.main.busy == 0.0
