@@ -9,6 +9,8 @@ interpretive) and simulated v5e time (the paper-comparable figure).
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -101,7 +103,23 @@ def simulated_throughput(full_cfg, result: Dict, *, invariant=False) -> float:
     )
 
 
-def emit(rows: List[Tuple], header: str) -> None:
+def emit(rows: List[Tuple], header: str, json_path: Optional[str] = None
+         ) -> None:
+    """Print the CSV rows; when ``json_path`` is given, also persist them
+    as JSON (``[{<header-col>: value, ...}]``) — CI uploads these as
+    workflow artifacts so the perf trajectory is recorded per commit."""
     print(header)
     for row in rows:
         print(",".join(str(x) for x in row))
+    if json_path:
+        cols = header.split(",")
+        payload = [
+            {cols[i]: row[i] for i in range(min(len(cols), len(row)))}
+            for row in rows
+        ]
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {json_path}")

@@ -122,9 +122,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workload for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON (CI artifact)")
     args = ap.parse_args()
     rows = run(n=6) if args.smoke else run()
-    emit(rows, "name,us_per_call,derived")
+    emit(rows, "name,us_per_call,derived", json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -1,30 +1,34 @@
-"""Verify-pipelining-depth sweep — latency ms x in-flight depth.
+"""Verify-pipelining sweep — verdict latency x per-request speculation depth.
 
-The dual-clock runtime (``serving.streams``) is what makes this figure
-possible: verification runs on its own execution stream with continuous
-verdict deadlines (``Engine(verify_latency_ms=...)``), so we can ask the
-question the old integer ``verify_latency`` could not express — how much
-verdict latency can the scheduler hide, and how many verify windows must
-be in flight to hide it?
+The dual-clock runtime (``serving.streams``) prices verification on its
+own execution stream with continuous verdict deadlines
+(``Engine(verify_latency_ms=...)``); the multi-window speculation pipeline
+(``core.pipeline`` + ``serving.statepool``) lets a single request keep
+``--spec-depth`` verify windows in flight.  Together they answer the
+question the old integer ``verify_latency`` could not express: how much
+verdict latency can the scheduler hide, and how deep must the per-request
+pipeline run to hide it?
 
-The sweep runs the REAL engine (reduced model, real rollbacks) with the
-stream clocks costed at the full Llama-8B scale, over:
+The sweep runs the REAL engine (reduced model, real rollbacks, real
+cascade invalidations) with the stream clocks costed at the full model's
+scale, over:
 
   * ``verify_latency_ms`` — extra delay between a verify pass completing
     on its stream and the verdict becoming visible (interconnect /
     host-sync / remote-verifier time);
-  * ``max_inflight`` — OverlapPolicy's cap on concurrently outstanding
-    verify windows, counted in requests (0 = unbounded): the pipelining
-    depth.  The workload verifies in groups of 2 so several groups can be
-    airborne at once.
+  * ``spec_depth`` — verify windows in flight per request (1 = the
+    paper's protocol, the old hard cap).
 
 Reported per point: simulated throughput (tokens/s over the two-stream
-makespan), verify-stream occupancy, and the ratio vs pause-decode.
-Expected shape: at depth 1 throughput decays with latency (each window
-waits for the previous verdict); deeper pipelining recovers it until the
-verify stream saturates.  Every configuration also asserts the tentpole
-invariant: committed streams are bitwise identical to the pause-decode
-baseline at every (latency, depth) point.
+makespan), verify-stream occupancy, peak in-flight depth actually reached,
+and the ratio vs pause-decode.  PR 3 showed the one-window protocol was
+the binding constraint at 50 ms (0.45x pause with the verify stream ~18%
+occupied); the depth axis is the fix.  A second table runs the ssm
+(rwkv6) — and, in full mode, hybrid (jamba) — configs through the same
+sweep: the double-buffered state pool is what lets them sustain depth >= 2
+at all (they were hard-capped at one window).  Every configuration also
+asserts the tentpole invariant: committed streams are bitwise identical to
+the pause-decode baseline at every (latency, depth) point.
 """
 
 from __future__ import annotations
@@ -34,7 +38,9 @@ import argparse
 from repro.core.determinism import Mode, REORDER_ONLY_POLICY
 from repro.serving.engine import Engine
 from repro.serving.scheduler import OverlapPolicy, PauseDecodePolicy
-from benchmarks.common import bench_model, emit, full_config, make_requests
+from benchmarks.common import (
+    bench_model, emit, full_config, make_requests,
+)
 
 #: paper-regime drift (flips rare, spans long) — the pipelining question
 #: is about latency hiding, not rollback recovery
@@ -48,13 +54,14 @@ def _requests(cfg, n, max_new):
     return reqs
 
 
-def _run(cfg, params, fcfg, n, max_new, *, scheduler, latency_ms=None):
+def _run(cfg, params, fcfg, n, max_new, *, scheduler, depth=1,
+         latency_ms=None):
     # group=2 on a 50% det mix => several verify groups can be in flight
-    # concurrently, so the depth cap actually bites (one group of G=4
-    # would make every depth >= 1 equivalent)
+    # concurrently even at depth 1; spec_depth then multiplies the windows
+    # a single request contributes
     eng = Engine(
         cfg, params, mode=Mode.LLM42, policy=DRIFT, window=8, group=2,
-        max_batch=8, capacity=256, scheduler=scheduler,
+        max_batch=8, capacity=256, scheduler=scheduler, spec_depth=depth,
         verify_latency_ms=latency_ms, cost_cfg=fcfg,
     )
     for r in _requests(cfg, n, max_new):
@@ -69,34 +76,56 @@ def _run(cfg, params, fcfg, n, max_new, *, scheduler, latency_ms=None):
         },
         "tput": out_tokens / max(rt.makespan, 1e-12),
         "occupancy": rt.verify.occupancy(max(rt.makespan, 1e-12)),
+        "peak_depth": eng.statepool.peak_depth,
+        "cascades": sum(r.num_cascaded_windows for r in done),
     }
 
 
-def run(n: int = 8, max_new: int = 32,
-        latencies_ms=(0.0, 10.0, 25.0, 50.0), depths=(1, 2, 4, 0)):
-    cfg, params = bench_model()
-    fcfg = full_config()
-    rows = []
-
+def _sweep(arch, rows, n, max_new, latencies_ms, depths, tag=""):
+    cfg, params = bench_model(arch)
+    fcfg = full_config(arch)
     base = _run(cfg, params, fcfg, n, max_new,
                 scheduler=PauseDecodePolicy(), latency_ms=0.0)
-    rows.append(("fig_pipeline_pause_tput", "", round(base["tput"], 1)))
+    rows.append((f"fig_pipeline{tag}_pause_tput", "", round(base["tput"], 1)))
 
     for lat in latencies_ms:
         for depth in depths:
             r = _run(cfg, params, fcfg, n, max_new,
-                     scheduler=OverlapPolicy(max_inflight=depth),
-                     latency_ms=lat)
+                     scheduler=OverlapPolicy(), depth=depth, latency_ms=lat)
             assert r["streams"] == base["streams"], (
-                f"latency {lat} ms / depth {depth} moved a committed stream"
+                f"{arch}: latency {lat} ms / spec_depth {depth} moved a "
+                f"committed stream"
             )
-            tag = f"lat{lat:g}ms_depth{depth or 'inf'}"
-            rows.append((f"fig_pipeline_{tag}_tput", "",
+            point = f"{tag}_lat{lat:g}ms_depth{depth}"
+            rows.append((f"fig_pipeline{point}_tput", "",
                          round(r["tput"], 1)))
-            rows.append((f"fig_pipeline_{tag}_occupancy", "",
+            rows.append((f"fig_pipeline{point}_occupancy", "",
                          round(r["occupancy"], 3)))
-            rows.append((f"fig_pipeline_{tag}_vs_pause", "",
+            rows.append((f"fig_pipeline{point}_peak_depth", "",
+                         r["peak_depth"]))
+            rows.append((f"fig_pipeline{point}_vs_pause", "",
                          round(r["tput"] / max(base["tput"], 1e-9), 3)))
+    return rows
+
+
+def run(n: int = 8, max_new: int = 32,
+        latencies_ms=(0.0, 25.0, 50.0, 150.0, 300.0), depths=(1, 2, 4, 8),
+        recurrent_rows=(("rwkv6-3b", 50.0), ("jamba-1.5-large-398b", 2000.0)),
+        recurrent_depths=(1, 2, 4)):
+    """Per-request depth bites once verdict latency exceeds the window
+    FILL time ((W-1) x decode-iteration seconds at the costed scale) —
+    below that, a request's next window isn't full before its verdict
+    lands and cross-request interleaving already hides the round trip.
+    The recurrent rows pick latencies scaled to each arch's iteration
+    cost for the same reason (llama-8B fills a W=8 window in ~140 ms;
+    jamba-398B in ~1.7 s)."""
+    rows = []
+    _sweep("llama3-8b", rows, n, max_new, latencies_ms, depths)
+    # the state-pool rows: recurrent/hybrid archs, previously hard-capped
+    # at one in-flight window, running the same latency-hiding sweep
+    for arch, lat in recurrent_rows:
+        _sweep(arch, rows, n, max_new, (lat,),
+               recurrent_depths, tag=f"_{arch.split('-')[0]}")
     return rows
 
 
@@ -104,12 +133,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sweep for CI (fewer points, shorter runs)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON (CI artifact)")
     args = ap.parse_args()
     if args.smoke:
-        rows = run(n=8, max_new=16, latencies_ms=(50.0,), depths=(2, 0))
+        rows = run(n=8, max_new=32, latencies_ms=(50.0, 150.0),
+                   depths=(1, 4), recurrent_rows=(("rwkv6-3b", 50.0),),
+                   recurrent_depths=(1, 2))
     else:
         rows = run()
-    emit(rows, "name,us_per_call,derived")
+    emit(rows, "name,us_per_call,derived", json_path=args.json)
 
 
 if __name__ == "__main__":

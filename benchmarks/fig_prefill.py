@@ -111,12 +111,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workload for CI (shorter prompts, fewer"
                          " requests)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON (CI artifact)")
     args = ap.parse_args()
     if args.smoke:
         rows = run(n=8, qps=30.0, long_len=256)
     else:
         rows = run()
-    emit(rows, "name,us_per_call,derived")
+    emit(rows, "name,us_per_call,derived", json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -13,24 +13,23 @@ token on a full match).  Every verify pass commits >= 1 token — guaranteed
 forward progress.
 
 In-flight verification (scheduler ``OverlapPolicy``, beyond §5.2
-limitation (1)): a window can be *submitted* (``begin_inflight``) without
-pausing the request — the candidates move to ``req.inflight`` and the fast
-path keeps appending fresh candidates behind it.  When the result lands,
-``apply_inflight_result`` splices the commit underneath the outstanding
-candidates: the committed stream is extended exactly as in the synchronous
-path, and the speculated-past tokens survive only if the first of them
-agrees with the verifier's commit token (they were conditioned on it);
-otherwise they are invalidated and recomputed — a rollback that reaches
-*past* the verified window.  Either way the committed stream is the same
-deterministic reference sequence, which is why policies are interchangeable
-bit-for-bit.
+limitation (1)): windows can be *submitted* without pausing the request —
+the candidates move to the request's in-flight FIFO (``req.pipeline``) and
+the fast path keeps appending fresh candidates behind them, up to the
+engine's ``spec_depth`` outstanding windows.  ``core.pipeline`` owns the
+in-order splice / cascade-invalidation semantics; this module keeps the
+synchronous commit rule, readiness/housekeeping helpers, and the verify-row
+builder (which conditions each row on the speculation immediately preceding
+it, so chained windows replay the right context).  Either way the committed
+stream is the same deterministic reference sequence, which is why policies,
+depths and verdict-landing orders are interchangeable bit-for-bit.
 """
 
 from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
-from repro.serving.request import InflightVerify, Request, State
+from repro.serving.request import Request, State
 
 
 def candidates_per_window(window: int) -> int:
@@ -57,10 +56,16 @@ def _update_acceptance(req: Request, n_match: int, n_submitted: int) -> None:
 
 
 def ready_for_verify(
-    req: Request, window: int, *, min_candidates: Optional[int] = None
+    req: Request,
+    window: int,
+    *,
+    min_candidates: Optional[int] = None,
+    depth: int = 1,
 ) -> bool:
     """A window is ready once full (W-1 candidates) or once the request is
-    done decoding.  ``min_candidates`` lowers the bar: the adaptive
+    done decoding — and once the in-flight FIFO has room: ``depth`` is the
+    pipelining bound (windows outstanding per request; the old protocol is
+    ``depth=1``).  ``min_candidates`` lowers the fullness bar: the adaptive
     scheduler verifies high-flip requests *eagerly* with partial windows —
     the fixed-shape (G, W) verify pass pads short rows, and the committed
     stream is a prefix-stable reference sequence, so window pacing moves
@@ -69,8 +74,8 @@ def ready_for_verify(
         return False
     if req.state == State.FINISHED or not req.candidates:
         return False
-    if req.inflight is not None:
-        return False  # one outstanding window per request
+    if len(req.pipeline) >= max(depth, 1):
+        return False  # pipeline at configured depth: wait for a verdict
     threshold = candidates_per_window(window)
     if min_candidates is not None:
         threshold = max(1, min(min_candidates, threshold))
@@ -93,25 +98,41 @@ def mark_window_state(req: Request, window: int) -> None:
 def build_verify_row(
     req: Request, window: int, pad_token: int = 0
 ) -> Tuple[List[int], List[int], int, int, int]:
-    """Returns (inputs[W], cand[W-1], cand_len, start_pos, out_base)."""
+    """Returns (inputs[W], cand[W-1], cand_len, start_pos, out_base).
+
+    The row conditions on the token immediately preceding its candidates in
+    sequence order: ``committed[-1]`` with an empty in-flight FIFO (the
+    anchored, depth-1 case) or the last in-flight candidate (a chained
+    window at depth > 1).  Positions shift past the in-flight candidates —
+    splices later move tokens from the FIFO into ``committed`` without
+    changing ``committed + in-flight`` length, so the absolute positions
+    fixed here stay valid however verdicts land."""
     W = window
     cand = req.candidates[: W - 1]
     cand_len = len(cand)
-    last_committed = req.committed[-1]
-    inputs = [last_committed] + cand
+    spec = sum(len(fl.cands) for fl in req.pipeline)
+    cond = req.pipeline[-1].cands[-1] if req.pipeline else req.committed[-1]
+    inputs = [cond] + cand
     inputs = inputs + [pad_token] * (W - len(inputs))
     cand_padded = cand + [-1] * ((W - 1) - cand_len)
-    # abs position of inputs[0]: prompt (+ any prefix embeds) + committed - 1
+    # abs position of inputs[0]: prompt (+ any prefix embeds) + committed
+    # + in-flight speculation - 1
     prefix = getattr(req, "_prefix_len", 0)
-    start_pos = req.prompt_len + prefix + len(req.committed) - 1
-    out_base = len(req.committed)  # output index of v_0
+    start_pos = req.prompt_len + prefix + len(req.committed) + spec - 1
+    out_base = len(req.committed) + spec  # output index of v_0
     return inputs, cand_padded, cand_len, start_pos, out_base
 
 
 def apply_verify_result(
     req: Request, n_match: int, commit_tok: int, window: int = 0
 ) -> None:
-    """Commit matching prefix + the verifier token; roll back the rest."""
+    """Commit matching prefix + the verifier token; roll back the rest.
+
+    The synchronous (pause-style) path: the row was conditioned on
+    ``committed[-1]``, which requires an empty in-flight FIFO — a request
+    with outstanding windows must drain them (``core.pipeline``) before it
+    can be verified synchronously."""
+    assert not req.pipeline, "sync verify requires an empty in-flight FIFO"
     cand_len = len(req.candidates)
     _update_acceptance(req, n_match, cand_len)
     n_match = min(n_match, cand_len)
@@ -139,80 +160,7 @@ def _clamp_budget(req: Request) -> None:
     if len(req.committed) > budget:
         req.committed = req.committed[:budget]
     if len(req.committed) >= budget:
-        # budget reached: any outstanding speculation is moot
+        # budget reached: any outstanding speculation — fresh candidates
+        # AND windows still in flight — is moot
         req.candidates = []
-
-
-def begin_inflight(
-    req: Request, window: int, submitted_at: float, ready_at: float
-) -> InflightVerify:
-    """Move the window's candidates out of the speculation buffer and mark
-    them as submitted-for-verification.  The request may keep decoding —
-    fresh candidates append to the (now shorter) ``req.candidates`` and are
-    positioned *after* the in-flight window.
-
-    ``submitted_at``/``ready_at`` are stream-clock times (see
-    ``serving.streams``): the verdict lands at the first iteration whose
-    main-stream clock reaches ``ready_at``."""
-    assert req.inflight is None, "one outstanding verify window per request"
-    k = candidates_per_window(window)
-    submitted = req.candidates[:k]
-    req.candidates = req.candidates[k:]
-    req.inflight = InflightVerify(
-        cands=submitted, submitted_at=submitted_at, ready_at=ready_at
-    )
-    # window is out: the request resumes speculating unless its budget is
-    # already covered by outstanding speculation (then it awaits the verdict)
-    if req.state is not State.FINISHED:
-        req.state = (
-            State.AWAITING_VERIFY if req.done_decoding() else State.RUNNING
-        )
-    return req.inflight
-
-
-def apply_inflight_result(req: Request, window: int = 0) -> None:
-    """Splice an in-flight window's verdict under the outstanding candidates.
-
-    Commit rule is identical to ``apply_verify_result`` applied to the
-    *submitted* candidates.  The speculated-past candidates (decoded while
-    the window was in flight) survive only on a full match whose commit
-    token equals the first speculated token — i.e. the continuation was
-    conditioned on exactly the tokens that ended up committed.  Any other
-    outcome invalidates them: they descend from a token the verifier rolled
-    back (or from a candidate beyond the budget), so they are discarded and
-    counted as recomputed.
-    """
-    fl = req.inflight
-    assert fl is not None and fl.n_match >= 0, "no completed in-flight verify"
-    k = len(fl.cands)
-    _update_acceptance(req, fl.n_match, k)
-    n_match = min(fl.n_match, k)
-    rejected = k - n_match
-
-    req.committed.extend(fl.cands[:n_match])
-    req.committed.append(int(fl.commit_tok))
-    req.num_verify_passes += 1
-
-    full_match = n_match == k
-    keep_tail = (
-        full_match
-        and bool(req.candidates)
-        and req.candidates[0] == int(fl.commit_tok)
-    )
-    if keep_tail:
-        # commit_tok subsumes the first speculated-past token; the rest
-        # remain valid candidates for the next window
-        req.candidates = req.candidates[1:]
-    else:
-        rejected += len(req.candidates)
-        req.candidates = []
-    if rejected > 0:
-        req.num_rollbacks += 1
-        req.num_recomputed_tokens += rejected
-
-    req.inflight = None
-    _clamp_budget(req)
-    if req.state is not State.FINISHED:
-        req.state = State.RUNNING  # verdict landed: no longer gated on verify
-        if window:  # unless the budget is still covered by leftover cands
-            mark_window_state(req, window)
+        req.pipeline = []

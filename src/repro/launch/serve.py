@@ -89,6 +89,14 @@ def main() -> None:
                          " verdicts landing this many ms after the verify"
                          " stream completes the pass (default: the legacy"
                          " 1-iteration logical shim)")
+    ap.add_argument("--spec-depth", type=int, default=1,
+                    help="verify windows a deterministic request may have in"
+                         " flight at once (multi-window speculation pipeline;"
+                         " 1 = the paper's protocol).  Deeper pipelines hide"
+                         " verdict latency; rollbacks cascade through later"
+                         " windows, and on ssm/hybrid archs the double-"
+                         " buffered state pool checkpoints recurrent state"
+                         " per window")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="tokens per prefill chunk, co-scheduled with decode"
                          " under the overlap policy (0 = legacy exclusive"
@@ -111,6 +119,7 @@ def main() -> None:
             "pause": PauseDecodePolicy(),
             "adaptive": AdaptivePolicy(),
         }[args.scheduler],
+        spec_depth=args.spec_depth,
         verify_latency_ms=args.verify_latency_ms,
         cost_cfg=full_cfg,  # stream deadlines priced at the full model's scale
         prefill_chunk=args.prefill_chunk,
@@ -126,6 +135,7 @@ def main() -> None:
     out_tokens = sum(r.num_output for r in done)
     rollbacks = sum(r.num_rollbacks for r in done)
     recomputed = sum(r.num_recomputed_tokens for r in done)
+    cascaded = sum(r.num_cascaded_windows for r in done)
     sim = costmodel.simulate(
         full_cfg, engine.events,
         invariant_mode=(args.mode == "batch_invariant"),
@@ -134,6 +144,9 @@ def main() -> None:
           f"in {wall:.1f}s wall")
     print(f"rollbacks={rollbacks} recomputed_tokens={recomputed} "
           f"({100.0 * recomputed / max(out_tokens, 1):.2f}%)")
+    print(f"speculation pipeline: depth limit {args.spec_depth}, "
+          f"peak in-flight {engine.statepool.peak_depth}, "
+          f"cascade-invalidated windows {cascaded}")
     prefill_ms = (sim.get("prefill_s", 0) + sim.get("prefill_chunk_s", 0)) * 1e3
     # a costed engine clock is authoritative (it saw verdict-gated waits
     # that emit no events); the log replay is the fallback for the

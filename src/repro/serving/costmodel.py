@@ -222,15 +222,19 @@ def _lane_times(
 class StreamSim:
     """Two-stream replay result: ``total_s`` is the makespan, the busy
     fields are per-stream work, ``verify_occupancy`` is the verify
-    stream's utilization over the makespan, and ``breakdown`` holds leaf
-    per-kind device seconds (informational — their sum exceeds the
-    makespan exactly when streams overlapped)."""
+    stream's utilization over the makespan, ``peak_inflight`` is the
+    deepest verdict queue the replay saw (> 1 only with multi-window
+    pipelining, where it is the telemetry that shows whether a depth
+    setting was actually exercised), and ``breakdown`` holds leaf per-kind
+    device seconds (informational — their sum exceeds the makespan exactly
+    when streams overlapped)."""
 
     total_s: float
     main_busy_s: float
     verify_busy_s: float
     verify_occupancy: float
     breakdown: Dict[str, float]
+    peak_inflight: int = 0
 
 
 def simulate_streams(
@@ -287,6 +291,7 @@ def simulate_streams(
         verify_busy_s=rt.verify.busy,
         verify_occupancy=rt.verify.busy / total if total > 0 else 0.0,
         breakdown=breakdown,
+        peak_inflight=rt.peak_outstanding,
     )
 
 
@@ -304,6 +309,7 @@ def simulate(
         "main_busy_s": sim.main_busy_s,
         "verify_busy_s": sim.verify_busy_s,
         "verify_occupancy": sim.verify_occupancy,
+        "peak_inflight": sim.peak_inflight,
         **{f"{k}_s": v for k, v in sim.breakdown.items()},
     }
 

@@ -14,9 +14,14 @@ Per-iteration verify/decode arbitration is delegated to the scheduler
 subsystem (``serving.scheduler``): ``PauseDecodePolicy`` reproduces the
 paper prototype's behaviour (verification pauses decoding, §5.2 limitation
 (1)); ``OverlapPolicy`` — the default for ``Mode.LLM42`` — co-schedules the
-verify group alongside the same iteration's decode batch, with per-request
-in-flight-verify state (``core.dvr``) so a request keeps speculating past a
-window already submitted.  Prefill stays per-request (deterministic by
+verify group alongside the same iteration's decode batch, with a
+per-request in-flight verify FIFO (``core.pipeline``) so a request keeps
+speculating past submitted windows and pipelines up to ``spec_depth``
+windows deep; verdicts splice strictly in submission order, rollbacks
+cascade through later windows, and the double-buffered state pool
+(``serving.statepool``) checkpoints recurrent state at each window
+submission so ssm/hybrid archs pipeline just as deep (they used to be
+hard-capped at one window).  Prefill stays per-request (deterministic by
 construction, never co-batched) but is chunk-resumable: with
 ``prefill_chunk > 0`` a prompt advances ``C`` tokens per iteration as the
 scheduler's third lane instead of one exclusive pass at admission, so a
@@ -41,12 +46,13 @@ paper-comparable throughput numbers.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dvr
+from repro.core import dvr, pipeline
 from repro.core.determinism import (
     FAST_PATH_POLICY,
     INVARIANT_SCHEDULE,
@@ -58,7 +64,7 @@ from repro.core.determinism import (
 from repro.core.verifier import make_verify_fn
 from repro.models.base import ModelConfig
 from repro.models.transformer import build_cross_cache, forward
-from repro.serving import costmodel, kv_cache, streams
+from repro.serving import costmodel, kv_cache, statepool, streams
 from repro.serving import scheduler as sched
 from repro.serving.request import Request, State
 from repro.serving.sampler import sample_batch, sample_token
@@ -85,7 +91,8 @@ class Engine:
         max_batch: int = 8,
         capacity: Optional[int] = None,
         scheduler: Optional[sched.SchedulePolicy] = None,
-        verify_latency: int = 1,  # DEPRECATED: iterations until a verdict lands
+        spec_depth: int = 1,  # verify windows in flight per request
+        verify_latency: Optional[int] = None,  # DEPRECATED logical-shim ticks
         verify_latency_ms: Optional[float] = None,  # continuous verdict latency
         cost_cfg: Optional[ModelConfig] = None,  # config the stream clocks cost at
         hw: costmodel.Hardware = costmodel.V5E,
@@ -101,16 +108,27 @@ class Engine:
         self.capacity = capacity or cfg.max_seq_len
         self.pool = kv_cache.CachePool(cfg, max_batch, self.capacity)
         self.axes = self.pool.axes
-        # recurrent/hybrid archs need a commit-point state checkpoint: the
-        # fast path advances SSM states irreversibly, so the verifier replays
-        # from this shadow pool (core/verifier.py docstring; DESIGN.md §4)
-        self.needs_ckpt = cfg.family in ("ssm", "hybrid")
-        self.ckpt = (
-            jax.tree_util.tree_map(jnp.copy, self.pool.data)
-            if self.needs_ckpt else None
-        )
+        # recurrent/hybrid archs advance SSM/RWKV state irreversibly on the
+        # fast path; the double-buffered state pool (serving.statepool)
+        # carries the verify replay anchor + per-window rollback checkpoints
+        # so speculation can run `spec_depth` windows deep anyway.  For
+        # attention archs the pool is host-side depth/extent telemetry only.
+        self.has_recurrent_state = statepool.has_recurrent_state(cfg)
+        assert spec_depth >= 1, "at least one verify window must be allowed"
+        self.spec_depth = int(spec_depth)
+        self.statepool = statepool.StatePool(cfg, max_batch, self.spec_depth)
 
         self.scheduler = scheduler if scheduler is not None else sched.default_policy(mode)
+        if verify_latency is not None:
+            warnings.warn(
+                "Engine(verify_latency=...) is deprecated: the integer "
+                "logical shim counts iterations, not time.  Use "
+                "verify_latency_ms (the costed dual-stream clock) instead.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        else:
+            verify_latency = 1
         assert verify_latency >= 1, "a verdict cannot land before its launch"
         self.verify_latency = verify_latency  # deprecated: logical-shim ticks
         assert verify_latency_ms is None or verify_latency_ms >= 0.0
@@ -129,11 +147,13 @@ class Engine:
             self.bind_cost_model(cost_cfg or cfg, hw)
         assert prefill_chunk >= 0, "prefill_chunk must be >= 0 (0 = exclusive)"
         self.prefill_chunk = int(prefill_chunk)
-        # chunked prefill generalizes the sliding-window chunk path to all
-        # attention archs; recurrent/hybrid families keep exclusive prefill
-        # (their commit-point checkpoint is taken at prefill end, and state
-        # advances irreversibly — same constraint that caps their speculation)
-        self.chunked_prefill = self.prefill_chunk > 0 and not self.needs_ckpt
+        # chunked prefill covers every family: attention archs share the
+        # embeds-based chunk pass; recurrent/hybrid archs run a
+        # state-collecting variant that checkpoints the state at each
+        # chunk's last REAL position, so final-chunk padding never leaks
+        # into the recurrent state and the chunk schedule is
+        # size-invariant (the per-chunk prefill checkpoint from ROADMAP)
+        self.chunked_prefill = self.prefill_chunk > 0
 
         self.queue: List[Request] = []
         self.running: List[Request] = []
@@ -208,6 +228,7 @@ class Engine:
         if key not in self._fns:
             cfg, axes = self.cfg, self.axes
             n_prefix = cfg.num_prefix_embeds
+            rec = self.has_recurrent_state
             schedule = (
                 INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
                 else VERIFY_SCHEDULE
@@ -221,21 +242,25 @@ class Engine:
                 if n_prefix:
                     tok_embeds = jnp.take(params["embed"], tokens, axis=0)
                     embeds = jnp.concatenate([prefix_embeds, tok_embeds], axis=1)
-                    logits, new_cache, _ = forward(
+                    logits, new_cache, per_pos = forward(
                         params, cfg, inputs_embeds=embeds,
                         cache=cache, start_pos=jnp.zeros(1, jnp.int32),
-                        schedule=schedule,
+                        schedule=schedule, collect_states=rec,
                     )
                     last = plen + n_prefix - 1
                 else:
-                    logits, new_cache, _ = forward(
+                    logits, new_cache, per_pos = forward(
                         params, cfg, tokens,
                         cache=cache, start_pos=jnp.zeros(1, jnp.int32),
-                        schedule=schedule,
+                        schedule=schedule, collect_states=rec,
                     )
                     last = plen - 1
                 tok = sample_token(logits[0, last], seed, jnp.int32(0), temp,
                                    top_k)
+                if rec:  # bucket-pad positions must not advance O(1) state
+                    new_cache = statepool.merge_rows(
+                        new_cache, statepool.select_index(per_pos, last[None]),
+                    )
                 pool2 = kv_cache.scatter(pool, axes, slots, new_cache)
                 return pool2, tok
 
@@ -243,11 +268,18 @@ class Engine:
         return self._fns[key]
 
     def _prefill_chunk_fn(self, C: int) -> Callable:
-        """Fixed-shape C-token prefill chunk, usable by every attention arch
+        """Fixed-shape C-token prefill chunk, usable by every arch
         (generalizes the old sliding-window-only chunk path).  Takes input
         embeddings so token prompts, prefix embeds (multimodal) and encdec
-        decoder prompts all share one shape class per chunk size."""
-        key = ("prefill_chunk", C)
+        decoder prompts all share one shape class per chunk size.
+
+        Recurrent/hybrid archs take a state-collecting variant: the chunk's
+        recurrent state is checkpointed at ``last`` (the chunk's final REAL
+        position), so final-chunk pad embeds never advance the O(1) state —
+        which is what makes a recurrent chunk schedule size-invariant and
+        lets ssm/hybrid prompts join the co-scheduled prefill lane."""
+        rec = self.has_recurrent_state
+        key = ("prefill_chunk_rec" if rec else "prefill_chunk", C)
         if key not in self._fns:
             cfg, axes = self.cfg, self.axes
             schedule = (
@@ -256,13 +288,19 @@ class Engine:
             )
 
             @jax.jit
-            def step(params, pool, slot, embeds, start):
+            def step(params, pool, slot, embeds, start, last):
                 slots = slot[None]
                 cache = kv_cache.gather(pool, axes, slots)
-                logits, new_cache, _ = forward(
+                logits, new_cache, per_pos = forward(
                     params, cfg, inputs_embeds=embeds, cache=cache,
                     start_pos=start[None], schedule=schedule,
+                    collect_states=rec,
                 )
+                if rec:  # state after the last real position, pads dropped
+                    new_cache = statepool.merge_rows(
+                        new_cache,
+                        statepool.select_index(per_pos, last[None]),
+                    )
                 return kv_cache.scatter(pool, axes, slots, new_cache), logits
 
             self._fns[key] = step
@@ -291,8 +329,13 @@ class Engine:
 
     def _check_capacity(self, req: Request) -> None:
         """Admission capacity guard: reject a request whose KV footprint
-        (padded prefill extent + output budget + verify-window overshoot)
-        cannot fit a slot, instead of silently overflowing the pool."""
+        (padded prefill extent + output budget + speculation overshoot)
+        cannot fit a slot, instead of silently overflowing the pool.
+
+        A deterministic request reserves ``spec_depth x (W-1) + 1`` verify
+        rows past its output budget: up to ``spec_depth`` windows of W-1
+        candidates can be in flight at once, and the deepest window's
+        replay writes one verifier token past its last candidate."""
         cfg = self.cfg
         has_full_attn = cfg.attn_kind != "sliding" and any(
             cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers)
@@ -307,7 +350,7 @@ class Engine:
         else:
             extent = prefix + _bucket(req.prompt_len)
         spec = (
-            self.window
+            self.spec_depth * (self.window - 1) + 1
             if self.mode == Mode.LLM42 and req.sampling.is_deterministic
             else 0
         )
@@ -318,7 +361,8 @@ class Engine:
             raise ValueError(
                 f"request {req.rid} cannot fit the KV pool: "
                 f"max(prefill extent {extent}, prompt {L} + max_new_tokens "
-                f"{req.sampling.max_new_tokens} + verify window {spec}) = "
+                f"{req.sampling.max_new_tokens} + verify rows "
+                f"{spec} [= depth {self.spec_depth} x (W-1) + 1]) = "
                 f"{need} > capacity {self.capacity}"
             )
 
@@ -421,7 +465,8 @@ class Engine:
             emb = jnp.concatenate([emb, pad], axis=1)
         t0 = time.perf_counter()
         self.pool.data, logits = self._prefill_chunk_fn(C)(
-            self.params, self.pool.data, jnp.int32(req.slot), emb, jnp.int32(s)
+            self.params, self.pool.data, jnp.int32(req.slot), emb,
+            jnp.int32(s), jnp.int32(max(real - 1, 0)),
         )
         wall = time.perf_counter() - t0
         req.prefill_pos = s + real
@@ -432,10 +477,8 @@ class Engine:
                 jnp.int32(0), jnp.float32(req.sampling.temperature),
                 jnp.int32(req.sampling.top_k),
             )
-            if self.needs_ckpt:  # commit point == post-prefill state
-                slot = jnp.array([req.slot], jnp.int32)
-                grabbed = kv_cache.gather(self.pool.data, self.axes, slot)
-                self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
+            # commit point == post-prompt state: first verify replay anchor
+            self.statepool.set_commit_point(self.pool.data, req.slot)
             req.committed.append(int(tok))  # T0: deterministic by construction
             req.prefill_time = self._now
             req.state = State.RUNNING
@@ -472,10 +515,8 @@ class Engine:
             jnp.int32(req.sampling.top_k), prefix,
         )
         wall = time.perf_counter() - t0
-        if self.needs_ckpt:  # commit point == post-prefill state
-            slot = jnp.array([req.slot], jnp.int32)
-            grabbed = kv_cache.gather(self.pool.data, self.axes, slot)
-            self.ckpt = kv_cache.scatter(self.ckpt, self.axes, slot, grabbed)
+        # commit point == post-prompt state: first verify replay anchor
+        self.statepool.set_commit_point(self.pool.data, req.slot)
         req.committed.append(int(tok))  # T0: deterministic by construction
         req.prefill_time = self._now
         ev = {
@@ -510,20 +551,21 @@ class Engine:
             mode=self.mode,
             window=self.window,
             group=self.group,
-            # recurrent state advances irreversibly: no speculating past a
-            # submitted window on ssm/hybrid archs (scheduler.py docstring)
-            speculate_past_inflight=not self.needs_ckpt,
+            # the double-buffered state pool makes speculation past
+            # submitted windows safe on EVERY arch: verification never
+            # writes the live recurrent state at launch, and rollbacks
+            # restore from the window's ring checkpoint
+            speculate_past_inflight=True,
             now=self._now,
             verify_latency=self.verify_latency,
             prefilling=tuple(
                 r for r in self.running if r.state is State.PREFILLING
             ),
             now_time=self.runtime.now,
-            verify_inflight=sum(
-                1 for r in self.running if r.inflight is not None
-            ),
+            verify_inflight=sum(len(r.pipeline) for r in self.running),
             verify_backlog=self.runtime.verify_backlog,
             acceptance={r.rid: r.accept_ema for r in self.running},
+            spec_depth=self.spec_depth,
         )
 
     # ------------------------------------------------------------------
@@ -578,21 +620,31 @@ class Engine:
         ``defer=False`` (pause policy / an AdaptivePolicy sync plan): the
         verdict is applied synchronously, exactly the seed behaviour; the
         pass blocks the main stream.  ``defer=True`` (overlap policy): the
-        submitted candidates move to per-request in-flight state and the
+        submitted candidates move into each request's in-flight FIFO
+        (``core.pipeline``, up to ``spec_depth`` windows deep) and the
         pass is launched on the verify *stream* — its verdict becomes
         visible when the stream completes the pass plus the modeled extra
         latency (``verify_latency_ms``; ``verify_latency`` ticks under the
-        logical shim).  The device pass still executes eagerly
-        (host-sequential simulation of an async verify stream), so its
-        KV/state repair is in place before any later cache read, but the
-        *protocol* result arrives at the stream-clock deadline.
+        logical shim), and splices strictly in submission order.  The
+        device pass still executes eagerly (host-sequential simulation of
+        an async verify stream), so its KV repair is in place before any
+        later cache read — in particular before the next chained window of
+        the same request replays — but the *protocol* result arrives at
+        the stream-clock deadline.  On recurrent archs the pass routes its
+        state selections through the double-buffered state pool instead of
+        touching the live state (``core.verifier`` docstring).
         """
         G, W = self.group, self.window
         rows = group[:G]
+        assert len({id(r) for r in rows}) == len(rows), (
+            "a request may contribute one window per grouped pass — chained "
+            "windows replay sequentially, never inside one batch"
+        )
         n_pad = G - len(rows)
         inputs, cands, cand_lens, starts, bases, slots, seeds, temps, tks = (
             [], [], [], [], [], [], [], [], []
         )
+        ring_idxs = []
         for r in rows:
             i, c, cl, sp, ob = dvr.build_verify_row(r, W)
             inputs.append(i)
@@ -604,6 +656,13 @@ class Engine:
             seeds.append(r.sampling.seed)
             temps.append(r.sampling.temperature)
             tks.append(r.sampling.top_k)
+            if defer:
+                assert len(r.pipeline) < self.spec_depth, (
+                    "scheduler plan exceeds the configured spec_depth"
+                )
+                ring_idxs.append(r.window_seq % self.spec_depth)
+            else:
+                ring_idxs.append(0)  # sync: FIFO empty, ring 0 is free
         for _ in range(n_pad):
             inputs.append([0] * W)
             cands.append([-1] * (W - 1))
@@ -614,18 +673,25 @@ class Engine:
             seeds.append(0)
             temps.append(0.0)
             tks.append(0)
+            ring_idxs.append(0)
         t0 = time.perf_counter()
-        ckpt_in = self.ckpt if self.needs_ckpt else self.pool.data
-        self.pool.data, ckpt_out, n_match, commit_tok, _v = self._verify_fn(
-            self.params, self.pool.data, ckpt_in,
+        args = (
             jnp.array(slots, jnp.int32), jnp.array(starts, jnp.int32),
             jnp.array(inputs, jnp.int32), jnp.array(cands, jnp.int32),
             jnp.array(cand_lens, jnp.int32), jnp.array(seeds, jnp.int32),
             jnp.array(temps, jnp.float32), jnp.array(bases, jnp.int32),
             jnp.array(tks, jnp.int32),
         )
-        if self.needs_ckpt:
-            self.ckpt = ckpt_out
+        if self.has_recurrent_state:
+            (self.pool.data, self.statepool.anchor, commit_rows, n_match,
+             commit_tok, _v) = self._verify_fn(
+                self.params, self.pool.data, self.statepool.anchor, *args
+            )
+            self.statepool.checkpoint(ring_idxs, slots, commit_rows)
+        else:
+            self.pool.data, n_match, commit_tok, _v = self._verify_fn(
+                self.params, self.pool.data, *args
+            )
         wall = time.perf_counter() - t0
         n_match = [int(n) for n in n_match]
         commit_tok = [int(t) for t in commit_tok]
@@ -643,12 +709,21 @@ class Engine:
         ready_at = self.runtime.launch_verify(ev, sync=not defer)
         if defer:
             submitted_at = self.runtime.now
-            for r, n, t in zip(rows, n_match, commit_tok):
-                fl = dvr.begin_inflight(r, W, submitted_at, ready_at)
-                fl.n_match, fl.commit_tok = n, t
+            for i, r in enumerate(rows):
+                fl = pipeline.submit_window(
+                    r, W, submitted_at, ready_at, ring_idx=ring_idxs[i]
+                )
+                fl.n_match, fl.commit_tok = n_match[i], commit_tok[i]
+                self.statepool.note_submit(r.slot, starts[i] + W)
         else:
             for r, n, t in zip(rows, n_match, commit_tok):
                 dvr.apply_verify_result(r, n, t, window=W)
+                if self.statepool.active:
+                    # live state + replay anchor <- the commit-index state
+                    # the pass just checkpointed (ring 0)
+                    self.pool.data = self.statepool.restore(
+                        self.pool.data, r.slot, 0
+                    )
         return ev
 
     def _retire(self) -> None:
@@ -658,13 +733,14 @@ class Engine:
         for r in done:
             # a det request must have no outstanding speculation at retirement
             if self.mode == Mode.LLM42 and r.sampling.is_deterministic and (
-                r.candidates or r.inflight is not None
+                r.candidates or r.pipeline
             ):
                 continue
             r.state = State.FINISHED
             r.finish_time = self._now
             self.running.remove(r)
             self.pool.free(r.slot)
+            self.statepool.note_release(r.slot)
             r.slot = -1
             self.finished.append(r)
 
@@ -742,16 +818,37 @@ class Engine:
         """Land in-flight verify results whose stream-clock deadline has
         been reached (``ready_at <= main-stream now``).  Groups launched at
         different times may land in the same iteration — and, with a
-        per-launch latency schedule, in inverted launch order; the splice
-        logic is per-request, so landing order never moves a committed
-        token."""
+        per-launch latency schedule, in inverted launch order; splicing is
+        per-request and strictly in submission order (``core.pipeline``
+        applies only the FIFO front, however early later verdicts arrived),
+        so landing order never moves a committed token.  A rollback splice
+        — or one that leaves no surviving speculation — restores the slot's
+        live recurrent state (and replay anchor) from the window's
+        state-pool checkpoint."""
         applied = False
         now = self.runtime.now
         for r in self.running:
-            fl = r.inflight
-            if fl is not None and fl.n_match >= 0 and fl.ready_at <= now:
-                dvr.apply_inflight_result(r, window=self.window)
+            for outcome in pipeline.apply_ready(r, self.window, now):
                 applied = True
+                self.statepool.note_splice(r.slot, len(outcome.cascaded))
+                if not self.statepool.active or (
+                    r.finished() and not (r.pipeline or r.candidates)
+                ):
+                    # skip device work only when the request is about to
+                    # retire with nothing left to verify — an EOS-finished
+                    # request with a surviving tail still verifies it, and
+                    # that replay needs the anchor advanced
+                    continue
+                if outcome.restore_state:
+                    self.pool.data = self.statepool.restore(
+                        self.pool.data, r.slot, outcome.record.ring_idx
+                    )
+                elif outcome.reanchor:
+                    # FIFO drained but live state + speculation tail
+                    # survive: only the replay anchor moves (the next
+                    # window launches anchored, one token past the chained
+                    # start state the last launch recorded)
+                    self.statepool.reanchor(r.slot, outcome.record.ring_idx)
         return applied
 
     def run(self, max_iters: int = 100000) -> List[Request]:

@@ -25,8 +25,10 @@ class State(enum.Enum):
 class InflightVerify:
     """A verification window submitted to the device but not yet applied.
 
-    The scheduler's ``OverlapPolicy`` lets a request keep speculating while
-    one of these is outstanding; ``core.dvr`` owns the splice/rollback
+    Requests hold a FIFO of these (``Request.pipeline``): the scheduler may
+    keep a request speculating — and keep *submitting further windows* —
+    while earlier windows are outstanding, up to the engine's
+    ``spec_depth``.  ``core.pipeline`` owns the in-order splice / cascade
     semantics.  ``n_match``/``commit_tok`` are filled in when the device
     pass completes (< 0 means still pending from the protocol's view — the
     discrete-event engine computes them eagerly but *applies* them at
@@ -35,13 +37,24 @@ class InflightVerify:
     ``submitted_at``/``ready_at`` are continuous stream-clock times
     (``serving.streams``): seconds under a costed clock, iteration ticks
     under the deprecated logical shim.  The verdict lands at the first
-    iteration whose main-stream clock reaches ``ready_at``."""
+    iteration whose main-stream clock reaches ``ready_at`` — and only once
+    every earlier window of the same request has spliced."""
 
     cands: List[int]
     submitted_at: float
     ready_at: float
     n_match: int = -1
     commit_tok: int = -1
+    #: token the window's replay re-consumed first: the previous in-flight
+    #: window's last candidate (chained) or ``committed[-1]`` (anchored)
+    cond_tok: int = -1
+    #: state-pool ring buffer holding this window's rollback checkpoint
+    ring_idx: int = 0
+    #: candidates popped off the front by predecessor splices (front
+    #: normalization): they were ACCEPTED — committed as the predecessor's
+    #: commit token — so acceptance telemetry must count them even though
+    #: ``cands``/``n_match`` no longer do
+    shifted: int = 0
 
 
 @dataclasses.dataclass
@@ -71,8 +84,11 @@ class Request:
     prefill_total: int = 0
     committed: List[int] = dataclasses.field(default_factory=list)
     candidates: List[int] = dataclasses.field(default_factory=list)
-    # window submitted for verification while decoding continues (OverlapPolicy)
-    inflight: Optional[InflightVerify] = None
+    # FIFO of windows submitted for verification while decoding continues
+    # (core.pipeline owns in-order splicing and cascade invalidation)
+    pipeline: List[InflightVerify] = dataclasses.field(default_factory=list)
+    # monotone per-request window counter (state-pool ring indexing)
+    window_seq: int = 0
     # acceptance telemetry: EMA of per-verdict acceptance fraction
     # (n_match / candidates submitted), updated by core.dvr on every
     # verdict.  Starts optimistic; AdaptivePolicy reads it to demote
@@ -82,6 +98,7 @@ class Request:
     num_rollbacks: int = 0
     num_recomputed_tokens: int = 0
     num_verify_passes: int = 0
+    num_cascaded_windows: int = 0  # windows discarded by cascade rollbacks
     prefill_time: float = -1.0
     finish_time: float = -1.0
     # encdec / multimodal payloads (stub-frontend outputs)
@@ -104,11 +121,12 @@ class Request:
 
     @property
     def inflight_cands(self) -> List[int]:
-        return self.inflight.cands if self.inflight is not None else []
+        """All in-flight window candidates, submission (= sequence) order."""
+        return [t for fl in self.pipeline for t in fl.cands]
 
     @property
     def speculation(self) -> List[int]:
-        """All uncommitted tokens in sequence order (in-flight window first)."""
+        """All uncommitted tokens in sequence order (in-flight FIFO first)."""
         return self.inflight_cands + self.candidates
 
     @property

@@ -9,10 +9,12 @@ whole non-deterministic fast path.  This module makes that choice pluggable:
   reference policy (and for A/B ablation in ``benchmarks/fig_overlap.py``).
 * ``OverlapPolicy``      — the default for ``Mode.LLM42``: a verify group is
   launched *alongside* the same iteration's decode batch.  Non-deterministic
-  requests never idle behind verification, and (on attention-only archs) a
-  deterministic request keeps speculating past a window that is already in
-  flight — ``core.dvr.begin_inflight`` / ``apply_inflight_result`` own the
-  splice/rollback bookkeeping.
+  requests never idle behind verification, and a deterministic request
+  keeps speculating past windows already in flight — and keeps *launching*
+  further windows, up to the engine's ``spec_depth`` pipelining bound
+  (``SchedulerView.spec_depth``) — ``core.pipeline`` owns the in-order
+  splice / cascade-rollback bookkeeping, ``serving.statepool`` the device
+  state checkpoints that make the depth safe on recurrent archs.
 
 Prefill is the third lane (§5.2 limitation (2)): when the engine runs with
 ``prefill_chunk > 0``, admitted requests enter ``State.PREFILLING`` and
@@ -44,11 +46,12 @@ verifier's reference sequence by construction, so it is bitwise identical
 across policies, arrival orders and co-batched traffic.
 ``tests/test_scheduler.py`` asserts exactly that.
 
-Recurrent/hybrid archs (``ssm``/``hybrid`` families) cap speculation at one
-window: their fast path advances state irreversibly, so speculating past a
-submitted window would decode from a state the verifier is about to
-replace.  Overlap still applies to *other* requests' decoding — the pause
-the tentpole removes.
+Recurrent/hybrid archs used to cap speculation at one window (their fast
+path advances state irreversibly); with the double-buffered state pool the
+verifier never writes live state at launch, so the engine now reports
+``speculate_past_inflight=True`` for every family.  The flag remains for
+policy logic (and for hypothetical deployments without the pool): when
+False, requests with in-flight windows are excluded from the decode batch.
 """
 
 from __future__ import annotations
@@ -92,6 +95,12 @@ class SchedulerView:
     #: per-request acceptance telemetry: rid -> EMA of the accepted
     #: fraction per verdict (Request.accept_ema); 1.0 before any verdict
     acceptance: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    #: engine pipelining bound: verify windows a single request may have in
+    #: flight (``Engine(spec_depth=...)`` / ``serve.py --spec-depth``); the
+    #: paper's protocol is depth 1.  Policies may plan shallower (the
+    #: adaptive policy scales depth with acceptance) but never deeper —
+    #: the state pool holds exactly this many checkpoint buffers per slot
+    spec_depth: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,16 +141,25 @@ def decodable(view: SchedulerView) -> List[Request]:
         if view.mode == Mode.LLM42 and r.sampling.is_deterministic:
             if len(r.candidates) >= max_cand:
                 continue  # current window full; awaiting (or in) verification
-            if r.inflight is not None and not view.speculate_past_inflight:
-                continue  # recurrent state: no speculation past the window
+            if r.pipeline and not view.speculate_past_inflight:
+                continue  # no state pool: no speculation past a window
         out.append(r)
     return out
 
 
-def verify_ready(view: SchedulerView) -> List[Request]:
+def verify_ready(
+    view: SchedulerView, depth: Optional[int] = None
+) -> List[Request]:
+    """Requests with a submittable window.  ``depth`` bounds windows in
+    flight per request (default: the engine's ``spec_depth``); a request
+    already at depth waits for a verdict before launching again."""
     if view.mode != Mode.LLM42:
         return []
-    return [r for r in view.running if dvr.ready_for_verify(r, view.window)]
+    d = view.spec_depth if depth is None else depth
+    return [
+        r for r in view.running
+        if dvr.ready_for_verify(r, view.window, depth=d)
+    ]
 
 
 def pick_prefill(view: SchedulerView) -> Optional[Request]:
@@ -190,7 +208,9 @@ class PauseDecodePolicy(SchedulePolicy):
             # synchronous-prefill semantics, merely sliced into fixed-shape
             # pieces — nothing else runs while a prompt is prefilling
             return Plan(prefill=view.prefilling[0])
-        ready = verify_ready(view)
+        # sync verdicts apply in the launch iteration: nothing is ever in
+        # flight, so the pipelining depth is irrelevantly 1 here
+        ready = verify_ready(view, depth=1)
         dec = decodable(view)
         if ready and (len(ready) >= view.group or not dec):
             return Plan(verify=ready)
@@ -219,11 +239,14 @@ class OverlapPolicy(SchedulePolicy):
     defers_verify = True
 
     def __init__(self, max_inflight: int = 0):
-        #: cap on concurrently in-flight verify windows (0 = unbounded).
-        #: With a slow verify stream (--verify-latency-ms) every det
-        #: request can end up with a window queued behind the stream's
-        #: backlog; the cap holds further launches until verdicts land —
-        #: the pipelining-depth knob benchmarks/fig_pipeline.py sweeps.
+        #: GLOBAL cap on concurrently in-flight verify windows across all
+        #: requests (0 = unbounded) — the verify-stream backlog knob.  The
+        #: per-request pipelining depth is the engine's ``spec_depth``
+        #: (``SchedulerView.spec_depth``): the policy keeps launching a
+        #: request's next window while its FIFO has room, so with a slow
+        #: verify stream (--verify-latency-ms) a single request can hide
+        #: ``spec_depth`` verdict round-trips — the depth axis
+        #: benchmarks/fig_pipeline.py sweeps.
         self.max_inflight = max_inflight
 
     def plan(self, view: SchedulerView) -> Plan:
@@ -253,7 +276,7 @@ class OverlapPolicy(SchedulePolicy):
                 # a PREFILLING request's join horizon (finish prefill, then
                 # fill a window) is too far out to hold a ready group for
                 and r.state is not State.PREFILLING
-                and (r.inflight is not None or not r.done_decoding())
+                and (bool(r.pipeline) or not r.done_decoding())
                 for r in det_pool
             )
             if may_join:
@@ -306,9 +329,14 @@ class AdaptivePolicy(SchedulePolicy):
 
     A demoted request whose EMA recovers above ``promote_above`` is
     promoted back to full overlapped speculation (hysteresis prevents
-    flapping).  While nothing is demoted the policy IS ``OverlapPolicy``
-    — identical plans, identical events — so low-rollback traffic keeps
-    the whole overlap win.
+    flapping).  Non-demoted requests pipeline with **acceptance-scaled
+    depth**: a request may hold ``max(1, round(ema * spec_depth))``
+    windows in flight, so a request whose candidates have started flipping
+    stops pushing a deep pipeline it will mostly cascade away, *before*
+    the demotion threshold trips.  At full acceptance (and always at
+    ``spec_depth=1``) the policy IS ``OverlapPolicy`` — identical plans,
+    identical events — so low-rollback traffic keeps the whole overlap
+    win.
 
     Note the policy carries per-request hysteresis state (the demoted
     set), unlike the stateless pause/overlap policies — use one instance
@@ -347,14 +375,36 @@ class AdaptivePolicy(SchedulePolicy):
         ema = view.acceptance.get(r.rid, 1.0)
         return max(1, int(round(ema * dvr.candidates_per_window(view.window))))
 
+    def _pipeline_depth(self, view: SchedulerView, r: Request) -> int:
+        """Acceptance-scaled in-flight depth for a promoted request: full
+        ``spec_depth`` at EMA 1.0, shrinking toward 1 as candidates start
+        flipping — a deep pipeline behind a likely rollback is pure
+        cascade fodder.  Never 0: demotion (not depth) turns overlap off."""
+        ema = view.acceptance.get(r.rid, 1.0)
+        return max(1, int(round(ema * view.spec_depth)))
+
+    def _promoted_ready(self, view: SchedulerView) -> List[Request]:
+        return [
+            r for r in view.running
+            if r.rid not in self._demoted
+            and dvr.ready_for_verify(
+                r, view.window, depth=self._pipeline_depth(view, r)
+            )
+        ]
+
     def plan(self, view: SchedulerView) -> Plan:
         self._update_demotions(view)
         if not self._demoted:
-            return self._overlap.plan(view)
+            return self._overlap._compose(
+                view, self._promoted_ready(view), decodable(view),
+                view.running,
+            )
         demoted = [r for r in view.running if r.rid in self._demoted]
         dem_ready = [
             r for r in demoted
-            if dvr.ready_for_verify(
+            # sync verification replays from committed[-1]: a freshly
+            # demoted request first drains its in-flight FIFO
+            if not r.pipeline and dvr.ready_for_verify(
                 r, view.window, min_candidates=self._eager_depth(view, r)
             )
         ]
@@ -381,7 +431,7 @@ class AdaptivePolicy(SchedulePolicy):
         # requests may decode (filling their eager window) but never
         # launch deferred, and — because they can never join a deferred
         # group — they are excluded from the group-holding pool.
-        ready = [r for r in verify_ready(view) if r.rid not in self._demoted]
+        ready = self._promoted_ready(view)
         det_pool = [r for r in view.running if r.rid not in self._demoted]
         return self._overlap._compose(view, ready, dec, det_pool)
 

@@ -1,0 +1,353 @@
+"""Slot-indexed, double-buffered device state pool (speculation tentpole).
+
+Attention KV rollback is *pointer-free*: the verifier's replay overwrites
+the window's cache entries positionally and anything past the commit point
+is shadowed by the position mask until the resumed decode rewrites it.
+Recurrent state (mamba conv/ssm, rwkv shift/wkv) has no positions to hide
+behind — the fast path advances one O(1) state per slot irreversibly, which
+is what used to cap ssm/hybrid archs at a single in-flight verify window:
+the verify pass had to scatter its commit-point state straight into the
+live pool, so decoding past a submitted window would have read state the
+verifier was about to replace.
+
+This module lifts that cap with per-slot *double buffering*:
+
+* the **live** state stays in the engine's main cache pool and is advanced
+  only by the fast path (decode / prefill) — verification never writes it
+  at launch time;
+* the **anchor** buffer holds, per slot, the state the *next* submitted
+  verify window's replay starts from (state after all speculation that
+  precedes the window, minus the window's conditioning token — the replay
+  re-consumes that token, exactly the commit-checkpoint convention).  With
+  no windows in flight the anchor IS the commit-point state, so sync
+  (pause-style) verification reads the same buffer;
+* a **ring** of ``depth`` checkpoint buffers holds one snapshot per
+  in-flight window: the per-position replay state selected at the window's
+  commit index (``per_pos[n_match]``).  When the window's verdict splices
+  with a rollback — or leaves the request with no surviving speculation —
+  the engine restores the live pool (and the anchor) from the window's
+  ring entry, so depth is bounded by the ring, not by the protocol.
+
+For attention-only archs there is no device state to buffer; the pool
+degrades to host-side KV-length / pipeline-depth accounting (telemetry the
+benchmarks and ``serve.py`` report).
+
+State trees
+-----------
+
+All device buffers here are *state trees*: pytrees mirroring the cache
+structure (``models.transformer.cache_spec``) with recurrent leaves
+materialized and attention/cross leaves replaced by ``None`` (an empty
+pytree node, so jit boundaries stay clean).  ``blocks`` leaves carry the
+slot axis at 1 (layer-stacked), ``head_layers`` leaves at 0 — the same
+convention as ``kv_cache.batch_axes``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.models.transformer import cache_spec
+
+#: leaf names of recurrent (O(1), position-free) cache state
+RECURRENT_KEYS = frozenset({"conv", "ssm", "tm_shift", "cm_shift", "wkv"})
+
+
+def has_recurrent_state(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# state-tree structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _kind(sub: Any) -> str:
+    """Classify a cache/per-pos subtree: ``"state"`` (a recurrent leaf
+    dict), ``"skip"`` (an attention/cross leaf dict, or a placeholder —
+    scalar ``0.0``, a scan-stacked array of them, or ``None``), or
+    ``"recurse"`` (structural nesting).  The single source of truth every
+    tree walker here dispatches on."""
+    if not isinstance(sub, dict):
+        return "skip"
+    if set(sub) & RECURRENT_KEYS:
+        return "state"
+    if "k" in sub or "mask" in sub:  # attention / cross leaves
+        return "skip"
+    return "recurse"
+
+
+def _filter_spec(sub: Any) -> Any:
+    """Keep recurrent leaf dicts, replace attention-layer dicts by None."""
+    kind = _kind(sub)
+    if kind == "skip":
+        return None
+    if kind == "state":
+        return dict(sub)
+    return {k: _filter_spec(v) for k, v in sub.items()}
+
+
+def state_spec(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct state tree for ``batch`` slots (no capacity axis —
+    recurrent state is O(1) per slot; the attention capacity argument below
+    only shapes leaves we immediately drop)."""
+    spec = cache_spec(cfg, batch, capacity=8)
+    return {
+        top: _filter_spec(spec[top])
+        for top in ("blocks", "head_layers")
+        if top in spec
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), state_spec(cfg, batch)
+    )
+
+
+def _rec(fn, subs: Sequence[Any], ax: int) -> Any:
+    s0 = subs[0]
+    kind = _kind(s0)
+    if kind == "skip":
+        return s0  # placeholder passes through
+    if kind == "state":
+        return {k: fn([s[k] for s in subs], ax) for k in s0}
+    return {k: _rec(fn, [s[k] for s in subs], ax) for k in s0}
+
+
+def _map_state(fn, *trees: Any) -> Dict[str, Any]:
+    """Apply ``fn(leaves, b_axis)`` at every recurrent leaf of congruent
+    state trees (``blocks`` slot axis 1, ``head_layers`` axis 0)."""
+    first = trees[0]
+    out: Dict[str, Any] = {}
+    for top, ax in (("blocks", 1), ("head_layers", 0)):
+        if top in first:
+            out[top] = _rec(fn, [t[top] for t in trees], ax)
+    return out
+
+
+def gather_rows(state: Dict[str, Any], slots: jax.Array) -> Dict[str, Any]:
+    """Batched rows (slot axis -> len(slots)) from a slot-indexed tree."""
+    return _map_state(
+        lambda ls, ax: jnp.take(ls[0], slots, axis=ax), state
+    )
+
+
+def scatter_rows(
+    state: Dict[str, Any], slots: jax.Array, rows: Dict[str, Any]
+) -> Dict[str, Any]:
+    """Write batched rows back into a slot-indexed tree."""
+
+    def put(ls, ax):
+        a, u = ls
+        idx = (slice(None),) * ax + (slots,)
+        return a.at[idx].set(u.astype(a.dtype))
+
+    return _map_state(put, state, rows)
+
+
+def rows_from_cache(cache: Dict[str, Any], slots: Optional[jax.Array] = None
+                    ) -> Dict[str, Any]:
+    """Extract the recurrent leaves of a (pool- or batch-shaped) cache tree
+    as a state tree; gathers at ``slots`` when given."""
+
+    def take(sub: Any) -> Any:
+        kind = _kind(sub)
+        if kind == "skip":
+            return None
+        if kind == "state":
+            return {k: sub[k] for k in sub if k in RECURRENT_KEYS}
+        return {k: take(v) for k, v in sub.items()}
+
+    tree = {
+        top: take(cache[top])
+        for top in ("blocks", "head_layers")
+        if top in cache
+    }
+    if slots is None:
+        return tree
+    return gather_rows(tree, slots)
+
+
+def merge_rows(cache: Dict[str, Any], rows: Dict[str, Any]) -> Dict[str, Any]:
+    """Return ``cache`` with its recurrent leaves replaced by ``rows``
+    (batch-shaped); attention/cross leaves pass through untouched."""
+
+    def merge(c: Any, r: Any) -> Any:
+        if r is None:
+            return c
+        if isinstance(r, dict):
+            return {k: (merge(c[k], r[k]) if k in r else c[k]) for k in c}
+        return r.astype(c.dtype)
+
+    out = dict(cache)
+    for top in ("blocks", "head_layers"):
+        if top in rows and top in cache:
+            out[top] = merge(cache[top], rows[top])
+    return out
+
+
+def select_index(per_pos: Any, idx: jax.Array) -> Dict[str, Any]:
+    """Pick, per row, the per-position replay state at ``idx`` (shape (G,)).
+
+    ``per_pos`` is ``forward(collect_states=True)``'s output: recurrent
+    leaves carry an extra window axis right after the batch axis
+    (``blocks``: (L, B, W, *rest); ``head_layers``: (B, W, *rest));
+    attention layers hold a scalar placeholder, emitted here as ``None``.
+    ``per_pos[j]`` is the state *after consuming* window input ``j``.
+    """
+
+    def pick(pp, ax):
+        if ax == 0:
+            return jax.vmap(lambda row, n: row[n], (0, 0), 0)(pp, idx)
+        return jax.vmap(lambda row, n: row[:, n], (1, 0), 1)(pp, idx)
+
+    def walk(sub: Any, ax: int) -> Any:
+        kind = _kind(sub)
+        if kind == "skip":
+            # attention-layer placeholder: a scalar 0.0, or a scan-stacked
+            # array of them inside the block stack — either way, no state
+            return None
+        if kind == "state":
+            return {k: pick(v, ax) for k, v in sub.items()}
+        return {k: walk(v, ax) for k, v in sub.items()}
+
+    return {
+        top: walk(per_pos[top], ax)
+        for top, ax in (("blocks", 1), ("head_layers", 0))
+        if top in per_pos
+    }
+
+
+def scatter_into_cache(
+    cache: Dict[str, Any], slots: jax.Array, rows: Dict[str, Any]
+) -> Dict[str, Any]:
+    """Write state-tree rows into the *full* cache pool at ``slots`` —
+    the live-state restore used on rollback splices."""
+
+    def put(c: Any, r: Any, ax: int) -> Any:
+        if r is None:
+            return c
+        if isinstance(r, dict):
+            return {k: (put(c[k], r[k], ax) if k in r else c[k]) for k in c}
+        idx = (slice(None),) * ax + (slots,)
+        return c.at[idx].set(r.astype(c.dtype))
+
+    out = dict(cache)
+    for top, ax in (("blocks", 1), ("head_layers", 0)):
+        if top in rows and top in cache:
+            out[top] = put(cache[top], rows[top], ax)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the pool
+# ---------------------------------------------------------------------------
+
+
+class StatePool:
+    """Double-buffered per-slot state checkpoints + depth/extent accounting.
+
+    ``active`` (recurrent/hybrid archs) means device buffers exist; for
+    attention-only archs every device method is a no-op and only the host
+    accounting (in-flight depth, speculative KV extent) is live.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, depth: int = 1):
+        assert depth >= 1, "the ring needs at least one checkpoint buffer"
+        self.cfg = cfg
+        self.depth = depth
+        self.num_slots = num_slots
+        self.active = has_recurrent_state(cfg)
+        # +1 scratch row so grouped-verification padding rows have a target
+        if self.active:
+            self.anchor = init_state(cfg, num_slots + 1)
+            self.ring: List[Dict[str, Any]] = [
+                init_state(cfg, num_slots + 1) for _ in range(depth)
+            ]
+        else:
+            self.anchor = None
+            self.ring = []
+        # host accounting (all archs): per-slot in-flight windows + peaks
+        self._inflight: Dict[int, int] = {}
+        self.peak_depth = 0
+        self.peak_extent = 0
+
+    # -- host accounting ------------------------------------------------
+
+    def note_submit(self, slot: int, extent: int) -> int:
+        """Record one submitted window; returns the slot's new depth."""
+        d = self._inflight.get(slot, 0) + 1
+        self._inflight[slot] = d
+        self.peak_depth = max(self.peak_depth, d)
+        self.peak_extent = max(self.peak_extent, extent)
+        return d
+
+    def note_splice(self, slot: int, flushed: int = 0) -> None:
+        """One verdict spliced (plus ``flushed`` cascade-discarded ones)."""
+        d = self._inflight.get(slot, 0) - 1 - flushed
+        if d > 0:
+            self._inflight[slot] = d
+        else:
+            self._inflight.pop(slot, None)
+
+    def note_release(self, slot: int) -> None:
+        self._inflight.pop(slot, None)
+
+    def depth_of(self, slot: int) -> int:
+        return self._inflight.get(slot, 0)
+
+    # -- device buffers --------------------------------------------------
+
+    def set_commit_point(self, pool_data: Dict[str, Any], slot: int) -> None:
+        """Anchor <- the slot's live state (prefill end: the state after the
+        full prompt is the first replay anchor / commit checkpoint)."""
+        if not self.active:
+            return
+        slots = jnp.array([slot], jnp.int32)
+        rows = rows_from_cache(pool_data, slots)
+        self.anchor = scatter_rows(self.anchor, slots, rows)
+
+    def checkpoint(
+        self, ring_idxs: Sequence[int], slots: Sequence[int], rows: Any
+    ) -> None:
+        """Store each row's commit-index state in its window's ring buffer
+        (rows batched as returned by the verify pass; grouped per ring
+        index so co-launched windows of different requests coexist)."""
+        if not self.active or rows is None:
+            return
+        for d in sorted(set(ring_idxs)):
+            sel = [i for i, x in enumerate(ring_idxs) if x == d]
+            idx = jnp.array(sel, jnp.int32)
+            sub = _map_state(lambda ls, ax: jnp.take(ls[0], idx, axis=ax), rows)
+            self.ring[d] = scatter_rows(
+                self.ring[d], jnp.array([slots[i] for i in sel], jnp.int32), sub
+            )
+
+    def reanchor(self, slot: int, ring_idx: int) -> None:
+        """Replay anchor <- the window's checkpointed commit state.  Needed
+        whenever the in-flight FIFO drains: the next window launches
+        anchored on ``committed[-1]`` (whose replay starts one token LATER
+        than the chained start state the last launch left in the anchor)."""
+        if not self.active:
+            return
+        slots = jnp.array([slot], jnp.int32)
+        rows = gather_rows(self.ring[ring_idx], slots)
+        self.anchor = scatter_rows(self.anchor, slots, rows)
+
+    def restore(
+        self, pool_data: Dict[str, Any], slot: int, ring_idx: int
+    ) -> Dict[str, Any]:
+        """Rollback (or drained-speculation) restore: live pool state and
+        the anchor both return to the window's checkpointed commit state.
+        Returns the updated pool tree."""
+        if not self.active:
+            return pool_data
+        slots = jnp.array([slot], jnp.int32)
+        rows = gather_rows(self.ring[ring_idx], slots)
+        self.anchor = scatter_rows(self.anchor, slots, rows)
+        return scatter_into_cache(pool_data, slots, rows)

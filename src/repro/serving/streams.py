@@ -175,6 +175,11 @@ class DualClockRuntime:
         #: arrival during a verdict-gated idle window is admitted at its
         #: arrival time, not at the verdict deadline
         self.skip_horizon: Optional[float] = None
+        #: deepest verdict queue seen (verdicts launched, not yet due):
+        #: with multi-window pipelining (Engine spec_depth > 1) several
+        #: verdicts per request can be airborne — this is the occupancy
+        #: telemetry benchmarks report alongside verify-stream busy time
+        self.peak_outstanding = 0
         self._n_launches = 0
         self._t0 = 0.0
         self._did_main_work = False
@@ -200,6 +205,12 @@ class DualClockRuntime:
         """Seconds of verify-stream work scheduled past the present — how
         far behind the verify stream is running (0 when caught up)."""
         return max(0.0, self.verify.now - self.main.now)
+
+    @property
+    def outstanding_verdicts(self) -> int:
+        """Verdicts launched but not yet due (the in-flight window count
+        as the streams see it)."""
+        return len(self.verdicts)
 
     def _latency_for_launch(self) -> float:
         i = self._n_launches
@@ -253,6 +264,7 @@ class DualClockRuntime:
                 return self.main.now
             ready = self.main.now + lat
             self.verdicts.push(ready, "verdict", ev)
+            self.peak_outstanding = max(self.peak_outstanding, len(self.verdicts))
             return ready
         dur = self.cost_fn(ev)
         if sync:
@@ -268,6 +280,7 @@ class DualClockRuntime:
         self.main.advance(self.contention * overlap)
         ready = finish + lat
         self.verdicts.push(ready, "verdict", ev)
+        self.peak_outstanding = max(self.peak_outstanding, len(self.verdicts))
         return ready
 
     def end_iteration(self) -> None:

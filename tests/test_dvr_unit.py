@@ -1,11 +1,12 @@
-"""Unit tests for DVR bookkeeping and the sampler (host-side logic)."""
+"""Unit tests for DVR bookkeeping, the multi-window speculation pipeline,
+and the sampler (host-side logic)."""
 
 import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import dvr
+from repro.core import dvr, pipeline
 from repro.serving.request import Request, SamplingParams, State
 from repro.serving.sampler import sample_batch, sample_token, sample_window
 
@@ -73,6 +74,19 @@ class TestDVRBookkeeping:
         r4 = _req([10], [20, 30, 40, 50], det=False)
         assert not dvr.ready_for_verify(r4, window=5)
 
+    def test_ready_for_verify_depth_gates_the_pipeline(self):
+        """depth bounds windows in flight per request: at the bound the
+        request waits for a verdict; deeper bounds re-open submission."""
+        r = _req([10], [20, 30, 40, 50], det=True)
+        pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
+        r.candidates = [60, 70, 80, 90]  # next window full
+        assert not dvr.ready_for_verify(r, window=5)  # default depth 1
+        assert dvr.ready_for_verify(r, window=5, depth=2)
+        pipeline.submit_window(r, window=5, submitted_at=2, ready_at=3)
+        r.candidates = [61, 71, 81, 91]
+        assert not dvr.ready_for_verify(r, window=5, depth=2)
+        assert dvr.ready_for_verify(r, window=5, depth=3)
+
     def test_ready_for_verify_eager_partial_window(self):
         """min_candidates lowers the readiness bar (AdaptivePolicy's eager
         verification for demoted requests) but never below one candidate
@@ -99,10 +113,40 @@ class TestAcceptanceTelemetry:
 
     def test_inflight_verdict_updates_ema(self):
         r = _req([10], [20, 30, 40, 50])
-        fl = dvr.begin_inflight(r, window=5, submitted_at=1.0, ready_at=2.0)
+        fl = pipeline.submit_window(r, window=5, submitted_at=1.0,
+                                    ready_at=2.0)
         fl.n_match, fl.commit_tok = 2, 77
-        dvr.apply_inflight_result(r, window=5)
+        pipeline.splice_front(r, window=5)
         assert r.accept_ema == pytest.approx(0.75)  # sample 2/4
+
+    def test_normalized_window_ema_counts_the_popped_head(self):
+        """Front normalization pops a chained window's first candidate
+        (it was ACCEPTED — committed as the predecessor's commit token);
+        the EMA sample must still count it on both sides, else a 1-of-4
+        verdict reads as 0-of-3 and drags the EMA toward demotion."""
+        r = _req([10], [20, 30, 40, 50, 60, 70, 80, 90])
+        a = pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
+        b = pipeline.submit_window(r, window=5, submitted_at=2, ready_at=3)
+        a.n_match, a.commit_tok = 4, 60  # full match, agrees with b.cands[0]
+        b.n_match, b.commit_tok = 1, 99  # device verdict: 1 of 4 accepted
+        pipeline.splice_front(r, window=5)  # normalizes b: 0 of 3 + shifted
+        assert (b.n_match, b.shifted, len(b.cands)) == (0, 1, 3)
+        pipeline.splice_front(r, window=5)
+        # samples: 4/4 (ema stays 1.0), then 1/4 -> ema 1 + 0.5*(0.25 - 1)
+        assert r.accept_ema == pytest.approx(0.625)
+
+    def test_cascaded_windows_do_not_update_ema(self):
+        """Cascade-discarded windows never spliced: their tokens fell to an
+        EARLIER window's rollback, so only the spliced verdict's sample
+        enters the EMA (double-punishing the flip would crater it)."""
+        r = _req([10], [20, 30, 40, 50, 60, 61, 62, 63])
+        a = pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
+        b = pipeline.submit_window(r, window=5, submitted_at=2, ready_at=3)
+        a.n_match, a.commit_tok = 0, 99  # rollback; b cascades away
+        b.n_match, b.commit_tok = 4, 77
+        pipeline.splice_front(r, window=5)
+        assert r.pipeline == []
+        assert r.accept_ema == pytest.approx(0.5)  # one sample of 0/4
 
     def test_partial_window_counts_submitted_fraction(self):
         """An eager 1-candidate verdict weighs the same as a full window:
@@ -132,71 +176,84 @@ class TestAcceptanceTelemetry:
 
 
 class TestInflightVerify:
-    """In-flight window bookkeeping (scheduler OverlapPolicy support)."""
+    """Single-window in-flight bookkeeping (the depth-1 protocol, now the
+    FIFO's base case)."""
 
     def _submit(self, committed, window_cands, past, window=5):
         r = _req(committed, list(window_cands) + list(past))
-        fl = dvr.begin_inflight(r, window=window, submitted_at=1,
-                                ready_at=1)
+        fl = pipeline.submit_window(r, window=window, submitted_at=1,
+                                    ready_at=1)
         assert fl.cands == list(window_cands)
         assert r.candidates == list(past)
         return r
 
-    def test_begin_inflight_moves_window_out(self):
+    def test_submit_moves_window_out(self):
         r = self._submit([10], [20, 30, 40, 50], [60, 61])
         # window is out for verification; speculation continues behind it
-        assert r.inflight.cands == [20, 30, 40, 50]
+        assert r.pipeline[0].cands == [20, 30, 40, 50]
+        assert r.pipeline[0].cond_tok == 10  # anchored on committed[-1]
         assert r.total_generated == 1 + 4 + 2
-        assert not dvr.ready_for_verify(r, window=5)  # no double-submit
+        assert r.window_seq == 1
+        assert not dvr.ready_for_verify(r, window=5)  # depth-1 FIFO full
 
     def test_full_match_agreeing_tail_survives(self):
         """Full match + commit token == first speculated-past token: the
         continuation was conditioned on exactly what got committed, so the
         remaining speculation stays valid."""
         r = self._submit([10], [20, 30, 40, 50], [60, 61])
-        r.inflight.n_match, r.inflight.commit_tok = 4, 60
-        dvr.apply_inflight_result(r)
+        r.pipeline[0].n_match, r.pipeline[0].commit_tok = 4, 60
+        out = pipeline.splice_front(r)
         assert r.committed == [10, 20, 30, 40, 50, 60]
         assert r.candidates == [61]  # 60 was subsumed by the commit
-        assert r.inflight is None
+        assert r.pipeline == []
         assert r.num_rollbacks == 0
+        assert not out.rolled_back
+        assert not out.restore_state  # surviving speculation: live state OK
+        # …but the FIFO drained: the next window launches anchored, so the
+        # replay anchor must advance to this window's checkpoint
+        assert out.reanchor
 
     def test_full_match_disagreeing_tail_invalidated(self):
         """Full match but the verifier's next token differs from the first
         speculated-past token: everything decoded past the window descends
         from a rolled-back token and must be recomputed."""
         r = self._submit([10], [20, 30, 40, 50], [60, 61, 62])
-        r.inflight.n_match, r.inflight.commit_tok = 4, 99
-        dvr.apply_inflight_result(r)
+        r.pipeline[0].n_match, r.pipeline[0].commit_tok = 4, 99
+        out = pipeline.splice_front(r)
         assert r.committed == [10, 20, 30, 40, 50, 99]
         assert r.candidates == []
         assert r.num_rollbacks == 1
         assert r.num_recomputed_tokens == 3  # 60, 61, 62
+        assert out.rolled_back and out.restore_state
 
     def test_window_mismatch_invalidates_past_speculation(self):
         """Rollback inside the window reaches THROUGH to the speculated-past
         tokens: they extend a rejected candidate."""
         r = self._submit([10], [20, 30, 40, 50], [60, 61])
-        r.inflight.n_match, r.inflight.commit_tok = 1, 77
-        dvr.apply_inflight_result(r)
+        r.pipeline[0].n_match, r.pipeline[0].commit_tok = 1, 77
+        out = pipeline.splice_front(r)
         assert r.committed == [10, 20, 77]
         assert r.candidates == []
         assert r.num_rollbacks == 1
         # 30, 40, 50 rejected in-window + 60, 61 speculated past it
         assert r.num_recomputed_tokens == 5
+        assert out.rolled_back and out.restore_state
 
     def test_no_tail_full_match(self):
         r = self._submit([10], [20, 30], [])
-        r.inflight.n_match, r.inflight.commit_tok = 2, 44
-        dvr.apply_inflight_result(r)
+        r.pipeline[0].n_match, r.pipeline[0].commit_tok = 2, 44
+        out = pipeline.splice_front(r)
         assert r.committed == [10, 20, 30, 44]
         assert r.num_rollbacks == 0
+        # clean splice, but nothing survives it: the live recurrent state
+        # lags committed by one consumed token — restore closes the gap
+        assert not out.rolled_back and out.restore_state
 
     def test_budget_clamp_drops_tail(self):
         r = self._submit([10], [20, 30, 40, 50], [60, 61], window=5)
         r.sampling.max_new_tokens = 6
-        r.inflight.n_match, r.inflight.commit_tok = 4, 60
-        dvr.apply_inflight_result(r)
+        r.pipeline[0].n_match, r.pipeline[0].commit_tok = 4, 60
+        pipeline.splice_front(r)
         assert len(r.committed) == 6
         assert r.candidates == []  # budget reached: speculation moot
 
@@ -204,11 +261,153 @@ class TestInflightVerify:
         for n_match in range(5):
             for past in ([], [60], [60, 61]):
                 r = self._submit([1], [20, 30, 40, 50], past)
-                r.inflight.n_match, r.inflight.commit_tok = n_match, 5
+                r.pipeline[0].n_match = n_match
+                r.pipeline[0].commit_tok = 5
                 before = len(r.committed)
-                dvr.apply_inflight_result(r)
+                pipeline.splice_front(r)
                 assert len(r.committed) >= before + 1
-                assert r.inflight is None
+                assert r.pipeline == []
+
+
+class TestMultiWindowPipeline:
+    """Depth > 1: chained submission, in-order splicing, front
+    normalization, and cascading invalidation (tentpole protocol)."""
+
+    def _deep_req(self, windows, past=(), committed=(10,), window=5,
+                  max_new=100):
+        """Submit len(windows) windows back to back; ``windows`` is a list
+        of candidate lists (each <= W-1 long, taken contiguously)."""
+        toks = [t for w in windows for t in w] + list(past)
+        r = _req(list(committed), toks, max_new=max_new)
+        for i, w in enumerate(windows):
+            fl = pipeline.submit_window(
+                r, window=len(w) + 1 if len(w) < window - 1 else window,
+                submitted_at=i, ready_at=i + 1, ring_idx=i,
+            )
+            assert fl.cands == list(w)
+        assert r.candidates == list(past)
+        return r
+
+    def test_chained_submission_conditions_on_predecessor(self):
+        r = self._deep_req([[20, 30, 40, 50], [60, 70, 80, 90]])
+        assert r.pipeline[0].cond_tok == 10  # anchored
+        assert r.pipeline[1].cond_tok == 50  # chained on window 1's tail
+        assert r.window_seq == 2
+        assert pipeline.spec_len(r) == 8
+        assert pipeline.conditioning_token(r) == 90
+
+    def test_full_chain_splices_with_shift(self):
+        """Window 2's first candidate occupies window 1's commit-token
+        position; on an agreeing full match it is popped (already
+        committed) and window 2 splices shifted by one."""
+        r = self._deep_req([[20, 30, 40, 50], [60, 70, 80, 90]], past=[95])
+        a, b = r.pipeline
+        a.n_match, a.commit_tok = 4, 60  # full match, agrees with b.cands[0]
+        b.n_match, b.commit_tok = 4, 95  # full match, agrees with past head
+        out1 = pipeline.splice_front(r)
+        assert r.committed == [10, 20, 30, 40, 50, 60]
+        assert r.pipeline == [b]
+        assert b.cands == [70, 80, 90] and b.n_match == 3  # normalized
+        assert not out1.rolled_back and not out1.restore_state
+        assert not out1.reanchor  # window 2 still in flight: chained anchor
+        out2 = pipeline.splice_front(r)
+        assert r.committed == [10, 20, 30, 40, 50, 60, 70, 80, 90, 95]
+        assert r.candidates == []  # 95 subsumed by window 2's commit token
+        assert r.num_rollbacks == 0
+        assert not out2.rolled_back
+        assert out2.restore_state  # nothing survives: anchor the state
+
+    def test_rollback_cascades_through_later_windows(self):
+        """A rollback in window k discards windows k+1..n AND the fresh
+        tail — they all descend from a rejected token."""
+        r = self._deep_req(
+            [[20, 30, 40, 50], [60, 70, 80, 90]], past=[95, 96]
+        )
+        a, b = r.pipeline
+        a.n_match, a.commit_tok = 2, 77  # rollback inside window 1
+        b.n_match, b.commit_tok = 4, 95
+        out = pipeline.splice_front(r)
+        assert r.committed == [10, 20, 30, 77]
+        assert r.pipeline == [] and r.candidates == []
+        assert out.rolled_back and out.restore_state
+        assert out.cascaded == [b]
+        assert r.num_cascaded_windows == 1
+        assert r.num_rollbacks == 1
+        # 40, 50 in-window + 60..90 cascaded + 95, 96 fresh = 8
+        assert r.num_recomputed_tokens == 8
+
+    def test_full_match_disagreeing_successor_cascades(self):
+        """Full match whose commit token differs from the next window's
+        first candidate: the successor extends a token the verifier never
+        committed — cascade, exactly like an in-window rollback."""
+        r = self._deep_req([[20, 30, 40, 50], [60, 70, 80, 90]])
+        a, b = r.pipeline
+        a.n_match, a.commit_tok = 4, 61  # full match, but 61 != 60
+        b.n_match, b.commit_tok = 4, 95
+        out = pipeline.splice_front(r)
+        assert r.committed == [10, 20, 30, 40, 50, 61]
+        assert r.pipeline == []
+        assert out.rolled_back and out.cascaded == [b]
+        assert r.num_recomputed_tokens == 4  # window 2's candidates
+
+    def test_in_order_splicing_gates_early_verdicts(self):
+        """A ready verdict behind an unready front must wait: only the
+        front may splice, however early later landings arrived."""
+        r = self._deep_req([[20, 30, 40, 50], [60, 70, 80, 90]])
+        a, b = r.pipeline
+        a.n_match, a.commit_tok = 4, 60
+        a.ready_at = 10.0  # front lands LATE
+        b.n_match, b.commit_tok = 4, 91
+        b.ready_at = 2.0  # second lands EARLY
+        assert pipeline.apply_ready(r, window=5, now=5.0) == []
+        assert r.committed == [10]  # nothing moved
+        outs = pipeline.apply_ready(r, window=5, now=10.0)
+        assert [o.record for o in outs] == [a, b]  # both land, in order
+        assert r.committed == [10, 20, 30, 40, 50, 60, 70, 80, 90, 91]
+
+    def test_pending_front_blocks_ready_successor(self):
+        """A front whose device result is still pending (n_match < 0)
+        blocks the FIFO even past both deadlines."""
+        r = self._deep_req([[20, 30, 40, 50], [60, 70, 80, 90]])
+        b = r.pipeline[1]
+        b.n_match, b.commit_tok = 4, 91
+        assert pipeline.apply_ready(r, window=5, now=100.0) == []
+
+    def test_budget_clamp_flushes_inflight_windows(self):
+        """Committed reaching the budget moots windows still in flight."""
+        r = self._deep_req([[20, 30, 40, 50], [60, 70, 80, 90]], max_new=6)
+        a, b = r.pipeline
+        a.n_match, a.commit_tok = 4, 60
+        b.n_match, b.commit_tok = 4, 95
+        out = pipeline.splice_front(r)
+        assert len(r.committed) == 6  # budget
+        assert r.pipeline == [] and r.candidates == []
+        assert r.finished()
+        # the mooted window counts as discarded (depth accounting and the
+        # cascade telemetry must see it) without rollback semantics
+        assert b in out.cascaded
+        assert r.num_cascaded_windows == 1
+        assert r.num_rollbacks == 0
+
+    def test_three_window_chain_then_tail_rollback(self):
+        """Chains survive window by window until the LAST window's commit
+        token disagrees with the fresh tail."""
+        r = self._deep_req(
+            [[20, 30, 40, 50], [60, 70, 80, 90], [95, 96, 97, 98]],
+            past=[99],
+        )
+        a, b, c = r.pipeline
+        a.n_match, a.commit_tok = 4, 60
+        b.n_match, b.commit_tok = 4, 95
+        c.n_match, c.commit_tok = 4, 55  # full match but 55 != 99
+        for _ in range(3):
+            out = pipeline.splice_front(r)
+        assert r.committed == [
+            10, 20, 30, 40, 50, 60, 70, 80, 90, 95, 96, 97, 98, 55
+        ]
+        assert out.rolled_back  # the fresh tail [99] was invalidated
+        assert r.num_recomputed_tokens == 1
+        assert r.num_cascaded_windows == 0
 
 
 class TestStateMachine:
@@ -244,24 +443,24 @@ class TestStateMachine:
         dvr.apply_verify_result(r, n_match=2, commit_tok=99)
         assert r.state is State.RUNNING
 
-    def test_begin_inflight_resumes_speculation(self):
+    def test_submit_window_resumes_speculation(self):
         r = _req([10], [20, 30, 40, 50])
         r.state = State.AWAITING_VERIFY
-        dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
+        pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
         assert r.state is State.RUNNING  # window out: decoding resumes
 
-    def test_begin_inflight_with_exhausted_budget_stays_awaiting(self):
+    def test_submit_window_with_exhausted_budget_stays_awaiting(self):
         r = _req([10], [20, 30, 40, 50], max_new=5)
         r.state = State.AWAITING_VERIFY
-        dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
+        pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
         assert r.state is State.AWAITING_VERIFY
 
     def test_inflight_verdict_returns_to_running(self):
         r = _req([10], [20, 30, 40, 50])
         r.state = State.AWAITING_VERIFY
-        fl = dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
+        fl = pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
         fl.n_match, fl.commit_tok = 4, 60
-        dvr.apply_inflight_result(r, window=5)
+        pipeline.splice_front(r, window=5)
         assert r.state is State.RUNNING
 
     def test_inflight_verdict_stays_awaiting_when_leftovers_cover_budget(self):
@@ -270,9 +469,9 @@ class TestStateMachine:
         request still cannot take a fast-path token — it awaits the next
         verify launch, not decoding."""
         r = _req([10], [20, 30, 40, 50, 60, 61], max_new=7)
-        fl = dvr.begin_inflight(r, window=5, submitted_at=1, ready_at=2)
+        fl = pipeline.submit_window(r, window=5, submitted_at=1, ready_at=2)
         fl.n_match, fl.commit_tok = 4, 60  # full match, tail survives
-        dvr.apply_inflight_result(r, window=5)
+        pipeline.splice_front(r, window=5)
         assert r.committed == [10, 20, 30, 40, 50, 60]
         assert r.candidates == [61]  # 6 committed + 1 candidate == budget 7
         assert r.done_decoding()

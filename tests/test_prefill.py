@@ -137,21 +137,33 @@ class TestChunkResume:
         for chunk in (4, 8):
             assert run(chunk) == base, (family, chunk)
 
-    def test_recurrent_family_falls_back_to_exclusive(self):
-        """ssm/hybrid archs keep exclusive prefill (irreversible state):
-        prefill_chunk is accepted but the lane never activates."""
-        cfg = get_smoke_config("rwkv6-3b")
+    @pytest.mark.parametrize("arch", ["rwkv6-3b", "jamba-1.5-large-398b"])
+    def test_recurrent_families_join_the_chunked_lane(self, arch):
+        """ssm/hybrid archs now prefill chunk-resumably: the per-chunk
+        state checkpoint selects the state at each chunk's last REAL
+        position, so final-chunk (and exclusive-path bucket) padding never
+        advances the recurrent state — streams are bitwise identical
+        across chunk sizes INCLUDING the exclusive path."""
+        cfg = get_smoke_config(arch)
         params = init_params(cfg, jax.random.key(0))
-        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2,
-                     capacity=128, prefill_chunk=8)
-        assert not eng.chunked_prefill
-        eng.submit(_req(cfg, plen=9, max_new=4))
-        done = eng.run()
-        assert len(done[0].committed) == 4
-        assert not any(
-            e["kind"] == "prefill_chunk"
-            for e in costmodel.flatten_events(eng.events)
-        )
+
+        def run(chunk):
+            eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2,
+                         capacity=128, prefill_chunk=chunk)
+            assert eng.chunked_prefill == (chunk > 0)
+            eng.submit(_req(cfg, plen=21, max_new=4))
+            done = eng.run()
+            if chunk:
+                assert any(
+                    e["kind"] == "prefill_chunk"
+                    for e in costmodel.flatten_events(eng.events)
+                ), "chunked lane never ran"
+            return done[0].committed
+
+        base = run(0)
+        assert len(base) == 4
+        for chunk in (4, 8, 16):
+            assert run(chunk) == base, (arch, chunk)
 
 
 class TestCapacityGuard:
@@ -176,6 +188,23 @@ class TestCapacityGuard:
         eng.submit(_req(cfg, plen=21, max_new=35, det=True, rid=0))
         with pytest.raises(ValueError, match="cannot fit"):
             eng.submit(_req(cfg, plen=21, max_new=36, det=True, rid=1))
+
+    def test_det_requests_reserve_depth_times_window(self):
+        """ISSUE 4 satellite: with spec_depth windows in flight, a det
+        request reserves depth x (W-1) + 1 verify rows past its budget —
+        boundary-exact at capacity."""
+        cfg, params = _model("dense")
+        # depth 3, W 8: spec = 3*7 + 1 = 22; prompt 21 + max_new 21 + 22
+        # = 64 == capacity fits exactly, one more token does not
+        eng = Engine(cfg, params, mode=Mode.LLM42, window=8, max_batch=2,
+                     capacity=64, spec_depth=3)
+        eng.submit(_req(cfg, plen=21, max_new=21, det=True, rid=0))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(_req(cfg, plen=21, max_new=22, det=True, rid=1))
+        # non-deterministic traffic reserves nothing extra at any depth
+        eng.submit(_req(cfg, plen=21, max_new=43, det=False, rid=2))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(_req(cfg, plen=21, max_new=44, det=False, rid=3))
 
     def test_chunked_extent_uses_chunk_padding(self):
         cfg, params = _model("dense")

@@ -78,28 +78,30 @@ def _long_reqs(cfg, rids, det_rids, max_new=14, plen=21):
 
 
 def _fake_req(rid, *, det=True, committed=1, cands=0, max_new=100,
-              inflight=False):
+              inflight=0):
     r = Request(rid=rid, prompt=[1, 2, 3],
                 sampling=SamplingParams(max_new_tokens=max_new,
                                         is_deterministic=det))
     r.committed = list(range(100, 100 + committed))
     r.candidates = list(range(200, 200 + cands))
-    if inflight:
-        from repro.serving.request import InflightVerify
+    from repro.serving.request import InflightVerify
 
-        r.inflight = InflightVerify(cands=[7, 8], submitted_at=0,
-                                    ready_at=2)
+    for i in range(inflight):
+        r.pipeline.append(InflightVerify(
+            cands=[7 + 2 * i, 8 + 2 * i], submitted_at=i, ready_at=i + 2,
+        ))
     return r
 
 
 def _view(running, *, window=5, group=2, speculate=True, now=1,
-          verify_inflight=0, acceptance=None):
+          verify_inflight=0, acceptance=None, spec_depth=1):
     if acceptance is None:
         acceptance = {r.rid: r.accept_ema for r in running}
     return SchedulerView(
         running=tuple(running), mode=Mode.LLM42, window=window, group=group,
         speculate_past_inflight=speculate, now=now,
         verify_inflight=verify_inflight, acceptance=acceptance,
+        spec_depth=spec_depth,
     )
 
 
@@ -138,12 +140,24 @@ class TestPolicyPlans:
         assert plan.verify and plan.decode
 
     def test_inflight_request_keeps_decoding(self):
-        r = _fake_req(0, cands=1, inflight=True)
+        r = _fake_req(0, cands=1, inflight=1)
         assert r in sched.decodable(_view([r]))
-        # …but not on recurrent archs (irreversible state)
+        # …but not when the engine reports no state pool to restore from
         assert r not in sched.decodable(_view([r], speculate=False))
-        # and it cannot be submitted again while the window is outstanding
+        # and it cannot be submitted again at the depth-1 default
         assert r not in sched.verify_ready(_view([r]))
+
+    def test_spec_depth_opens_multi_window_launches(self):
+        """With spec_depth > 1 a request with a full window AND windows in
+        flight may launch again — until its FIFO reaches the bound."""
+        r = _fake_req(0, cands=4, inflight=1)
+        assert r not in sched.verify_ready(_view([r], spec_depth=1))
+        assert r in sched.verify_ready(_view([r], spec_depth=2))
+        deep = _fake_req(1, cands=4, inflight=3)
+        assert deep not in sched.verify_ready(_view([deep], spec_depth=3))
+        assert deep in sched.verify_ready(_view([deep], spec_depth=4))
+        plan = OverlapPolicy().plan(_view([r], spec_depth=2))
+        assert [q.rid for q in plan.verify] == [0]
 
     def test_default_policy_per_mode(self):
         assert isinstance(default_policy(Mode.LLM42), OverlapPolicy)
@@ -235,6 +249,33 @@ class TestAdaptivePolicy:
         assert not plan.sync_verify
         assert 1 in [r.rid for r in plan.decode]
 
+    def test_demoted_request_drains_its_pipeline_before_sync(self):
+        """Sync verification replays from committed[-1]: a freshly demoted
+        request with windows still in flight must wait them out."""
+        r = _fake_req(0, cands=1, inflight=1)
+        r.accept_ema = 0.1
+        pol = AdaptivePolicy()
+        plan = pol.plan(_view([r], spec_depth=2))
+        assert not plan.verify  # in-flight window pending: no sync launch
+        r.pipeline.clear()
+        plan2 = pol.plan(_view([r], spec_depth=2))
+        assert plan2.sync_verify and [q.rid for q in plan2.verify] == [0]
+
+    def test_pipeline_depth_scales_with_acceptance(self):
+        """Acceptance-scaled pipelining: a promoted request's in-flight
+        depth shrinks with its EMA — full spec_depth at 1.0, depth 1 near
+        the demotion threshold."""
+        r = _fake_req(0, cands=4, inflight=2)
+        pol = AdaptivePolicy()
+        # ema 1.0 at spec_depth 4 -> depth 4: two in flight, may launch
+        plan = pol.plan(_view([r], spec_depth=4))
+        assert [q.rid for q in plan.verify] == [0]
+        # ema 0.62 (not demoted) -> round(0.62 * 4) = 2: FIFO already full
+        r.accept_ema = 0.62
+        plan2 = pol.plan(_view([r], spec_depth=4))
+        assert not plan2.verify
+        assert not plan2.sync_verify  # not demoted, just depth-throttled
+
 
 # ----------------------------------------------------------------------
 # engine integration: determinism across policies / arrival orders
@@ -263,15 +304,51 @@ class TestCrossPolicyDeterminism:
 
     def test_overlap_with_larger_verify_latency(self, model):
         """A slower (more async) verifier means deeper speculation past the
-        window — the committed stream must not move."""
+        window — the committed stream must not move.  Routed through the
+        costed clock (verify_latency_ms); the integer shim is deprecated."""
         cfg, params = model
         det = {0}
         base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2], det),
                        scheduler=PauseDecodePolicy())
-        for latency in (1, 2, 3):
+        for latency_ms in (5.0, 20.0, 60.0):
             got, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2], det),
-                          scheduler=OverlapPolicy(), verify_latency=latency)
-            assert got[0].committed == base[0].committed, latency
+                          scheduler=OverlapPolicy(),
+                          verify_latency_ms=latency_ms)
+            assert got[0].committed == base[0].committed, latency_ms
+
+    def test_integer_verify_latency_shim_is_deprecated(self, model):
+        """The logical integer shim still works bit-for-bit but warns:
+        new users belong on verify_latency_ms."""
+        cfg, params = model
+        det = {0}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1], det),
+                       scheduler=PauseDecodePolicy())
+        with pytest.warns(DeprecationWarning, match="verify_latency_ms"):
+            got, eng = _run(cfg, params, _reqs(cfg, [0, 1], det),
+                            scheduler=OverlapPolicy(), verify_latency=2)
+        assert eng.verify_latency == 2  # shim still honored
+        assert got[0].committed == base[0].committed
+
+    def test_spec_depth_sweep_agrees_bitwise(self, model):
+        """Acceptance criterion: committed streams bitwise identical
+        across --spec-depth {1, 2, 4, 8} under both clock modes."""
+        cfg, params = model
+        det = {0, 2}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                       scheduler=PauseDecodePolicy())
+        for depth in (1, 2, 4, 8):
+            for kw in ({}, dict(verify_latency_ms=25.0)):
+                got, eng = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                                scheduler=OverlapPolicy(), spec_depth=depth,
+                                **kw)
+                for rid in det:
+                    assert got[rid].committed == base[rid].committed, (
+                        depth, kw, rid
+                    )
+                if kw and depth > 1:
+                    # the costed clock keeps windows airborne long enough
+                    # for the depth to actually be exercised
+                    assert eng.statepool.peak_depth > 1, (depth, kw)
 
     def test_adaptive_policy_agrees_bitwise(self, model):
         """AdaptivePolicy reschedules (demotions, eager partial windows,
@@ -401,27 +478,58 @@ class TestVerdictOrdering:
             for rid in det:
                 assert got[rid].committed == base[rid].committed, schedule
 
+    def test_multiwindow_out_of_order_landings_are_bitwise_identical(
+            self, model):
+        """Tentpole acceptance: several windows PER REQUEST airborne while
+        verdicts land in inverted launch order across requests — in-order
+        splicing within each request keeps every committed stream on the
+        reference sequence."""
+        cfg, params = model
+        det = {0, 1, 2}
+        base, _ = _run(cfg, params, _reqs(cfg, [0, 1, 2, 3], det),
+                       scheduler=PauseDecodePolicy())
+        for schedule in ([9, 1, 8, 1, 7, 1], [2, 9, 2, 9, 2],
+                         [13, 1, 1, 11, 1, 1, 9]):
+            eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY,
+                         window=5, group=1, max_batch=8, capacity=256,
+                         scheduler=OverlapPolicy(), spec_depth=3)
+            eng.runtime.latency_schedule = [float(x) for x in schedule]
+            for r in _reqs(cfg, [0, 1, 2, 3], det):
+                eng.submit(r)
+            got = {r.rid: r for r in eng.run()}
+            for rid in det:
+                assert got[rid].committed == base[rid].committed, schedule
+            assert eng.statepool.peak_depth > 1, schedule  # depth exercised
+
     _base_cache = {}
 
     @settings(max_examples=4, deadline=None)
-    @given(schedule=st.lists(st.integers(1, 9), min_size=2, max_size=10))
-    def test_random_latency_schedules_never_move_tokens(self, model, schedule):
-        """Hypothesis sweep over latency schedules (falls back to the
-        deterministic example sweep without hypothesis installed)."""
+    @given(
+        schedule=st.lists(st.integers(1, 9), min_size=2, max_size=10),
+        depth=st.integers(1, 4),
+    )
+    def test_random_latency_schedules_never_move_tokens(self, model,
+                                                        schedule, depth):
+        """Hypothesis sweep (ISSUE 4 satellite): random per-launch latency
+        schedules drive inverted verdict landings ACROSS requests while
+        multi-window pipelines are airborne; in-order splicing WITHIN each
+        request must keep committed streams bitwise identical.  (Falls
+        back to the deterministic example sweep without hypothesis.)"""
         cfg, params = model
         if "base" not in self._base_cache:  # one baseline run per session
             self._base_cache["base"], _ = _run(
-                cfg, params, _reqs(cfg, [0, 1], {0}, max_new=10),
+                cfg, params, _reqs(cfg, [0, 1], {0, 1}, max_new=10),
                 scheduler=PauseDecodePolicy())
         base = self._base_cache["base"]
         eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
                      group=1, max_batch=8, capacity=256,
-                     scheduler=OverlapPolicy())
+                     scheduler=OverlapPolicy(), spec_depth=depth)
         eng.runtime.latency_schedule = [float(x) for x in schedule]
-        for r in _reqs(cfg, [0, 1], {0}, max_new=10):
+        for r in _reqs(cfg, [0, 1], {0, 1}, max_new=10):
             eng.submit(r)
         got = {r.rid: r for r in eng.run()}
-        assert got[0].committed == base[0].committed, schedule
+        assert got[0].committed == base[0].committed, (schedule, depth)
+        assert got[1].committed == base[1].committed, (schedule, depth)
 
 
 class TestNoIdleGuarantee:

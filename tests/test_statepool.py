@@ -1,0 +1,192 @@
+"""Double-buffered state pool: tree plumbing, depth accounting, and the
+engine-level acceptance criterion — recurrent/hybrid archs sustain
+speculation depth >= 2 (previously hard-capped at one in-flight window)
+with committed streams bitwise identical to pause-decode."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.determinism import Mode, ReductionPolicy
+from repro.models import init_params
+from repro.serving import statepool
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams
+from repro.serving.scheduler import OverlapPolicy, PauseDecodePolicy
+
+DRIFTY = ReductionPolicy(
+    thresholds=((2, 16), (4, 8), (16, 4)), combine_dtype="bfloat16"
+)
+
+
+class TestStateTrees:
+    def test_state_spec_keeps_only_recurrent_leaves(self):
+        cfg = get_smoke_config("jamba-1.5-large-398b")  # attn + mamba mix
+        spec = statepool.state_spec(cfg, batch=3)
+        leaves = jax.tree_util.tree_leaves(spec)
+        assert leaves, "hybrid arch must carry recurrent state"
+        kinds = {cfg.layer_kind(i) for i in range(cfg.num_layers)}
+        assert "attn" in kinds and "mamba" in kinds
+        # attention periods collapse to None (empty nodes), so every leaf
+        # that remains is recurrent state
+        flat, _ = jax.tree_util.tree_flatten_with_path(spec)
+        for path, leaf in flat:
+            assert path[-1].key in statepool.RECURRENT_KEYS
+
+    def test_attention_arch_pool_is_inert(self):
+        cfg = get_smoke_config("llama3-8b")
+        pool = statepool.StatePool(cfg, num_slots=4, depth=2)
+        assert not pool.active
+        assert pool.anchor is None and pool.ring == []
+        pool.set_commit_point({}, 0)  # device methods are no-ops
+        assert pool.restore({"x": 1}, 0, 0) == {"x": 1}
+
+    def test_gather_scatter_roundtrip(self):
+        cfg = get_smoke_config("rwkv6-3b")
+        state = statepool.init_state(cfg, batch=4)
+        slots = jnp.array([1, 3], jnp.int32)
+        rows = statepool.gather_rows(state, slots)
+        bumped = jax.tree_util.tree_map(lambda a: a + 1.0, rows)
+        state2 = statepool.scatter_rows(state, slots, bumped)
+        back = statepool.gather_rows(state2, slots)
+        for a, b in zip(jax.tree_util.tree_leaves(back),
+                        jax.tree_util.tree_leaves(bumped)):
+            assert jnp.allclose(a, b.astype(a.dtype))
+        # untouched slots stay zero
+        rest = statepool.gather_rows(state2, jnp.array([0, 2], jnp.int32))
+        assert all(
+            jnp.all(leaf == 0) for leaf in jax.tree_util.tree_leaves(rest)
+        )
+
+    def test_select_index_picks_per_row_positions(self):
+        """per_pos[j] = state after window input j; selection is per-row.
+        Attention placeholders — scalar or scan-stacked — drop to None."""
+        L, B, W = 2, 3, 4
+        pp = {
+            "blocks": {
+                "0": jnp.zeros((L,)),  # scan-stacked attention placeholder
+                "1": {"ssm": jnp.arange(L * B * W * 5, dtype=jnp.float32)
+                      .reshape(L, B, W, 5)},
+            },
+            "head_layers": {
+                "0": 0.0,  # scalar attention placeholder
+                "1": {"wkv": jnp.arange(B * W * 3, dtype=jnp.float32)
+                      .reshape(B, W, 3)},
+            },
+        }
+        idx = jnp.array([0, 2, 3], jnp.int32)
+        rows = statepool.select_index(pp, idx)
+        assert rows["blocks"]["0"] is None
+        assert rows["head_layers"]["0"] is None
+        picked = rows["blocks"]["1"]["ssm"]  # (L, B, 5)
+        for b in range(B):
+            assert jnp.array_equal(
+                picked[:, b], pp["blocks"]["1"]["ssm"][:, b, int(idx[b])]
+            )
+        head = rows["head_layers"]["1"]["wkv"]  # (B, 3)
+        for b in range(B):
+            assert jnp.array_equal(
+                head[b], pp["head_layers"]["1"]["wkv"][b, int(idx[b])]
+            )
+
+    def test_checkpoint_and_restore_roundtrip(self):
+        """A window checkpoint scattered to the ring comes back through
+        restore() into both the live cache and the anchor."""
+        cfg = get_smoke_config("rwkv6-3b")
+        pool = statepool.StatePool(cfg, num_slots=2, depth=2)
+        assert pool.active
+        from repro.models.transformer import init_cache
+
+        cache = init_cache(cfg, 3, 16)  # 2 slots + scratch
+        rows = statepool.rows_from_cache(cache, jnp.array([1], jnp.int32))
+        marked = jax.tree_util.tree_map(lambda a: a + 7.0, rows)
+        pool.checkpoint([1], [1], marked)
+        cache2 = pool.restore(cache, slot=1, ring_idx=1)
+        live = statepool.rows_from_cache(cache2, jnp.array([1], jnp.int32))
+        anchored = statepool.gather_rows(
+            pool.anchor, jnp.array([1], jnp.int32)
+        )
+        for got, want in zip(jax.tree_util.tree_leaves(live),
+                             jax.tree_util.tree_leaves(marked)):
+            assert jnp.allclose(got.astype(jnp.float32),
+                                want.astype(jnp.float32))
+        for got, want in zip(jax.tree_util.tree_leaves(anchored),
+                             jax.tree_util.tree_leaves(marked)):
+            assert jnp.allclose(got.astype(jnp.float32),
+                                want.astype(jnp.float32))
+
+    def test_depth_accounting(self):
+        cfg = get_smoke_config("llama3-8b")
+        pool = statepool.StatePool(cfg, num_slots=4, depth=4)
+        assert pool.note_submit(0, extent=10) == 1
+        assert pool.note_submit(0, extent=20) == 2
+        assert pool.note_submit(1, extent=5) == 1
+        assert pool.peak_depth == 2
+        assert pool.peak_extent == 20
+        pool.note_splice(0)
+        assert pool.depth_of(0) == 1
+        pool.note_splice(0, flushed=0)
+        assert pool.depth_of(0) == 0
+        pool.note_submit(1, extent=5)
+        pool.note_splice(1, flushed=1)  # rollback cascade drops both
+        assert pool.depth_of(1) == 0
+        pool.note_submit(2, extent=1)
+        pool.note_release(2)
+        assert pool.depth_of(2) == 0
+
+
+def _reqs(cfg, rids, det, max_new=14):
+    return [
+        Request(
+            rid=i, prompt=[(5 * i + j) % cfg.vocab_size for j in range(9)],
+            sampling=SamplingParams(
+                max_new_tokens=max_new, is_deterministic=(i in det),
+                seed=70 + i,
+            ),
+        )
+        for i in rids
+    ]
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "jamba-1.5-large-398b"])
+class TestRecurrentDepth:
+    """Acceptance criterion: ssm (rwkv6) and hybrid (jamba, with mamba
+    layers) configs sustain speculation depth >= 2 bitwise-identically."""
+
+    _models = {}
+
+    def _model(self, arch):
+        if arch not in self._models:
+            cfg = get_smoke_config(arch)
+            self._models[arch] = (cfg, init_params(cfg, jax.random.key(0)))
+        return self._models[arch]
+
+    def _run(self, arch, scheduler, depth=1, **kw):
+        cfg, params = self._model(arch)
+        eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
+                     group=2, max_batch=8, capacity=256, scheduler=scheduler,
+                     spec_depth=depth, **kw)
+        for r in _reqs(cfg, [0, 1, 2, 3], {0, 2}):
+            eng.submit(r)
+        return {r.rid: r for r in eng.run()}, eng
+
+    def test_depth_two_bitwise_and_exercised(self, arch):
+        base, _ = self._run(arch, PauseDecodePolicy())
+        got, eng = self._run(arch, OverlapPolicy(), depth=2,
+                             verify_latency_ms=20.0)
+        for rid in (0, 2):
+            assert got[rid].committed == base[rid].committed, (arch, rid)
+        # previously hard-capped at 1: the pool must prove depth 2 happened
+        assert eng.statepool.peak_depth >= 2, arch
+        # the drifty policy flips: cascade rollbacks must actually have
+        # exercised the restore path, not just the happy chain
+        assert sum(r.num_rollbacks for r in got.values()) > 0, arch
+
+    def test_deep_pipeline_with_cascades(self, arch):
+        base, _ = self._run(arch, PauseDecodePolicy())
+        got, eng = self._run(arch, OverlapPolicy(), depth=4,
+                             verify_latency_ms=50.0)
+        for rid in (0, 2):
+            assert got[rid].committed == base[rid].committed, (arch, rid)
+        assert eng.statepool.peak_depth >= 3, arch

@@ -196,3 +196,19 @@ class TestCostedClock:
         rt.idle_until(4.0)
         assert rt.now == 4.0
         assert rt.main.busy == 0.0
+
+    def test_outstanding_verdict_telemetry(self):
+        """Multi-window pipelining keeps several verdicts airborne; the
+        runtime tracks the live count and the peak (benchmark telemetry)."""
+        rt = self._rt({"verify": 1.0, "decode": 1.0}, latency=50.0,
+                      contention=0.0)
+        for _ in range(3):
+            rt.begin_iteration()
+            rt.charge({"kind": "decode"})
+            rt.launch_verify({"kind": "verify"})
+        assert rt.outstanding_verdicts == 3
+        assert rt.peak_outstanding == 3
+        rt.main.wait(200.0)
+        rt.begin_iteration()  # drains all due deadlines
+        assert rt.outstanding_verdicts == 0
+        assert rt.peak_outstanding == 3  # peak is sticky
