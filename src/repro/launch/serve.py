@@ -101,6 +101,22 @@ def main() -> None:
                     help="tokens per prefill chunk, co-scheduled with decode"
                          " under the overlap policy (0 = legacy exclusive"
                          " whole-prompt prefill at admission)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-KV block size in tokens (serving.blockpool):"
+                         " full-attention KV is allocated block-by-block as"
+                         " sequences grow instead of one dense max_seq_len"
+                         " ring per slot")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV block-pool size (HBM budget knob); default ="
+                         " dense parity (max_batch x capacity/block_size)."
+                         " Undersized pools trigger the preemption lane:"
+                         " LRU victims are evicted and later restored by"
+                         " deterministic recompute of their committed"
+                         " stream")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="commit-aware radix prefix cache: admissions map"
+                         " their longest committed-prefix match to shared"
+                         " read-only KV blocks and prefill only the tail")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -123,6 +139,9 @@ def main() -> None:
         verify_latency_ms=args.verify_latency_ms,
         cost_cfg=full_cfg,  # stream deadlines priced at the full model's scale
         prefill_chunk=args.prefill_chunk,
+        block_size=args.block_size,
+        num_blocks=args.num_blocks,
+        prefix_cache=(args.prefix_cache == "on"),
     )
     reqs = build_requests(cfg, args.requests, args.det_ratio, args.max_new,
                           args.seed, args.workload)
@@ -147,6 +166,21 @@ def main() -> None:
     print(f"speculation pipeline: depth limit {args.spec_depth}, "
           f"peak in-flight {engine.statepool.peak_depth}, "
           f"cascade-invalidated windows {cascaded}")
+    ms = engine.mem_stats()
+    if ms["paged"]:
+        print(f"paged KV: {ms['num_blocks']} blocks x {ms['block_size']} tok, "
+              f"peak in use {ms['peak_blocks_in_use']}, "
+              f"peak concurrency {ms['peak_running']}")
+        if engine.prefix_cache is not None:
+            hits, misses = ms["prefix_hits"], ms["prefix_misses"]
+            rate = hits / max(hits + misses, 1)
+            print(f"prefix cache: hit rate {100 * rate:.0f}% "
+                  f"({ms['prefix_hit_tokens']} tokens served from cache), "
+                  f"{ms['prefix_size_blocks']} blocks resident, "
+                  f"{ms['prefix_evictions']} evicted")
+        print(f"preemption lane: {ms['num_preemptions']} preemptions, "
+              f"{ms['num_restores']} restores "
+              f"({ms['restored_tokens']} tokens recomputed bitwise)")
     prefill_ms = (sim.get("prefill_s", 0) + sim.get("prefill_chunk_s", 0)) * 1e3
     # a costed engine clock is authoritative (it saw verdict-gated waits
     # that emit no events); the log replay is the fallback for the

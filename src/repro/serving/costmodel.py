@@ -89,6 +89,71 @@ def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     return total
 
 
+def kv_block_bytes(
+    cfg: ModelConfig, block_size: int, dtype_bytes: int = 2
+) -> int:
+    """HBM bytes of one paged KV block (``serving.blockpool``): K + V +
+    the int32 position row, across all full-attention layers."""
+    total = 0
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) == "attn":
+            total += 2 * block_size * cfg.num_kv_heads * cfg.hd * dtype_bytes
+            total += 4 * block_size  # pos (int32)
+    return total
+
+
+def pool_hbm_bytes(
+    cfg: ModelConfig, num_blocks: int, num_slots: int, block_size: int,
+    dtype_bytes: int = 2,
+) -> int:
+    """HBM budget of a paged cache pool: ``num_blocks`` KV blocks plus the
+    per-slot recurrent state rows.  The dense manager's footprint is the
+    special case ``num_blocks = num_slots * ceil(capacity / block_size)`` —
+    which is exactly the default pool size, so ``fig_cache`` compares
+    paged vs dense at a genuinely equal budget."""
+    return (
+        num_blocks * kv_block_bytes(cfg, block_size, dtype_bytes)
+        + num_slots * state_bytes(cfg, dtype_bytes)
+    )
+
+
+def dense_hbm_bytes(
+    cfg: ModelConfig, num_slots: int, capacity: int, dtype_bytes: int = 2
+) -> int:
+    """HBM budget of the legacy dense manager: one ``capacity``-long KV
+    ring per slot plus the recurrent state rows."""
+    per_slot = capacity * kv_bytes_per_token(cfg, dtype_bytes)
+    per_slot += 4 * capacity * sum(
+        1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "attn"
+    )  # pos rows
+    return num_slots * (per_slot + state_bytes(cfg, dtype_bytes))
+
+
+def memory_report(events: Iterable[Dict[str, Any]]) -> Dict[str, int]:
+    """Memory-pressure + cache-hit accounting over an engine event log:
+    prompt tokens served from the prefix cache (``cached`` on prefill
+    events), preemption/restore counts, tokens dropped at preemption and
+    tokens deterministically recomputed by restore replays."""
+    out = {
+        "cached_tokens": 0, "preemptions": 0, "restores": 0,
+        "preempted_tokens": 0, "replayed_tokens": 0,
+    }
+    for ev in flatten_events(events):
+        kind = ev.get("kind")
+        if kind == "cache_hit":
+            out["cached_tokens"] += ev.get("tokens", 0)
+        elif kind == "prefill_chunk" and ev.get("replay"):
+            out["replayed_tokens"] += ev.get("tokens", 0)
+        elif kind == "preempt":
+            out["preemptions"] += 1
+            out["preempted_tokens"] += ev.get("dropped_tokens", 0)
+        elif kind == "restore":
+            out["restores"] += 1
+        elif kind == "prefill" and ev.get("replay"):
+            out["replayed_tokens"] += ev.get("tokens", 0)
+    return out
+
+
 def state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     """Recurrent state bytes per request (mamba/rwkv layers)."""
     total = 0

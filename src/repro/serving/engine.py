@@ -29,6 +29,18 @@ long prompt no longer stalls the decode batch (§5.2 limitation (2));
 decode batches are formed from all decodable requests each iteration
 (continuous batching).
 
+Memory is paged (``serving.blockpool``): full-attention KV lives in a
+global pool of fixed-size ref-counted blocks addressed through per-request
+block tables, a radix prefix cache (``serving.prefixcache``) maps the
+longest *committed*-prefix match of an arriving prompt onto shared
+read-only blocks (only the tail is prefilled), and on pool exhaustion the
+memory policy (``scheduler.BlockMemoryPolicy``) preempts an LRU victim —
+its blocks are evicted while its committed stream, slot and statepool
+replay anchor survive, and the later restore replays only committed
+tokens through the chunked-prefill lane, which is bitwise-identical by
+construction.  Admission is free-block accounting, not dense per-slot
+reservation.
+
 Every device step goes through a jitted function cached per *shape class*
 (batch size, prompt bucket, window) — recompilation per shape is exactly
 the shape→schedule coupling (O2) the paper builds on.
@@ -36,18 +48,17 @@ the shape→schedule coupling (O2) the paper builds on.
 Time is kept by the dual-clock execution-stream runtime
 (``serving.streams``): decode/prefill passes charge the main stream,
 deferred verification launches on the verify stream, and verdict deadlines
-are continuous (``verify_latency_ms``; the integer ``verify_latency`` is
-the deprecated 1-tick-per-iteration shim).  An event log still records
-(kind, shape metadata, wall time) per step; the benchmark harness replays
-it through the TPU cost model (``serving.costmodel``) to derive
-paper-comparable throughput numbers.
+are continuous (``verify_latency_ms``; the default clock is the logical
+1-tick-per-iteration mode).  An event log still records (kind, shape
+metadata, wall time) per step; the benchmark harness replays it through
+the TPU cost model (``serving.costmodel``) to derive paper-comparable
+throughput numbers.
 """
 
 from __future__ import annotations
 
 import time
-import warnings
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +75,8 @@ from repro.core.determinism import (
 from repro.core.verifier import make_verify_fn
 from repro.models.base import ModelConfig
 from repro.models.transformer import build_cross_cache, forward
-from repro.serving import costmodel, kv_cache, statepool, streams
+from repro.serving import costmodel, kv_cache, prefixcache, statepool, streams
+from repro.serving import blockpool
 from repro.serving import scheduler as sched
 from repro.serving.request import Request, State
 from repro.serving.sampler import sample_batch, sample_token
@@ -92,11 +104,14 @@ class Engine:
         capacity: Optional[int] = None,
         scheduler: Optional[sched.SchedulePolicy] = None,
         spec_depth: int = 1,  # verify windows in flight per request
-        verify_latency: Optional[int] = None,  # DEPRECATED logical-shim ticks
         verify_latency_ms: Optional[float] = None,  # continuous verdict latency
         cost_cfg: Optional[ModelConfig] = None,  # config the stream clocks cost at
         hw: costmodel.Hardware = costmodel.V5E,
         prefill_chunk: int = 0,  # tokens per prefill chunk; 0 = exclusive
+        block_size: int = blockpool.DEFAULT_BLOCK_SIZE,  # KV tokens per block
+        num_blocks: Optional[int] = None,  # pool size; None = dense parity
+        prefix_cache: bool = True,  # share committed-prefix KV blocks
+        mem_policy: Optional[sched.BlockMemoryPolicy] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -106,8 +121,27 @@ class Engine:
         self.group = group
         self.max_batch = max_batch
         self.capacity = capacity or cfg.max_seq_len
-        self.pool = kv_cache.CachePool(cfg, max_batch, self.capacity)
+        self.pool = kv_cache.CachePool(
+            cfg, max_batch, self.capacity,
+            block_size=block_size, num_blocks=num_blocks,
+        )
         self.axes = self.pool.axes
+        # commit-aware prefix sharing needs (a) paged full-attention KV to
+        # share, (b) a token-addressable position 0 (prefix embeds and
+        # encdec cross caches are per-request side inputs the radix key
+        # cannot see), and (c) no recurrent state (an O(1) state at the
+        # match point cannot be reconstructed from shared KV alone)
+        shareable = (
+            self.pool.paged
+            and not statepool.has_recurrent_state(cfg)
+            and not cfg.num_prefix_embeds
+            and cfg.family != "encdec"
+        )
+        self.prefix_cache: Optional[prefixcache.PrefixCache] = (
+            prefixcache.PrefixCache(self.pool.block_size)
+            if (prefix_cache and shareable) else None
+        )
+        self.mem_policy = mem_policy or sched.BlockMemoryPolicy()
         # recurrent/hybrid archs advance SSM/RWKV state irreversibly on the
         # fast path; the double-buffered state pool (serving.statepool)
         # carries the verify replay anchor + per-window rollback checkpoints
@@ -119,30 +153,17 @@ class Engine:
         self.statepool = statepool.StatePool(cfg, max_batch, self.spec_depth)
 
         self.scheduler = scheduler if scheduler is not None else sched.default_policy(mode)
-        if verify_latency is not None:
-            warnings.warn(
-                "Engine(verify_latency=...) is deprecated: the integer "
-                "logical shim counts iterations, not time.  Use "
-                "verify_latency_ms (the costed dual-stream clock) instead.",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-        else:
-            verify_latency = 1
-        assert verify_latency >= 1, "a verdict cannot land before its launch"
-        self.verify_latency = verify_latency  # deprecated: logical-shim ticks
         assert verify_latency_ms is None or verify_latency_ms >= 0.0
         self.verify_latency_ms = verify_latency_ms
         self.hw = hw
         # dual-clock execution-stream runtime (serving.streams).  Default is
-        # the logical shim (1 tick per iteration, verdicts verify_latency
-        # ticks after launch — the pre-stream behaviour, bit for bit).
-        # Passing verify_latency_ms — or calling bind_cost_model(), which
-        # run_online() does — switches to the costed clock: continuous
-        # main/verify stream times from the cost model, verify passes
-        # queueing on their own stream, verdicts landing latency_ms after
-        # the pass completes.
-        self.runtime = streams.DualClockRuntime(latency=float(verify_latency))
+        # the logical clock (1 tick per iteration, verdicts 1 tick after
+        # launch).  Passing verify_latency_ms — or calling
+        # bind_cost_model(), which run_online() does — switches to the
+        # costed clock: continuous main/verify stream times from the cost
+        # model, verify passes queueing on their own stream, verdicts
+        # landing latency_ms after the pass completes.
+        self.runtime = streams.DualClockRuntime(latency=1.0)
         if verify_latency_ms is not None:
             self.bind_cost_model(cost_cfg or cfg, hw)
         assert prefill_chunk >= 0, "prefill_chunk must be >= 0 (0 = exclusive)"
@@ -157,11 +178,17 @@ class Engine:
 
         self.queue: List[Request] = []
         self.running: List[Request] = []
+        self.preempted: List[Request] = []  # blocks evicted, restore pending
         self.finished: List[Request] = []
         self.events: List[Dict[str, Any]] = []
         self._fns: Dict[Any, Callable] = {}
-        self._verify_fn = make_verify_fn(cfg, group, window)
+        self._verify_fn = make_verify_fn(cfg, group, window, self.pool.layout)
         self._now = 0  # logical iteration counter
+        # memory-subsystem telemetry
+        self.num_preemptions = 0
+        self.num_restores = 0
+        self.restored_tokens = 0
+        self.peak_running = 0
 
     # ------------------------------------------------------------------
     # stream clocks
@@ -181,8 +208,7 @@ class Engine:
 
         Verdict latency under a costed clock is ``verify_latency_ms``
         (default 0: a verdict is visible as soon as the verify-stream pass
-        completes).  The deprecated integer ``verify_latency`` has no
-        meaning in seconds and is ignored here beyond its >= 1 contract.
+        completes).
         """
         assert getattr(self, "_now", 0) == 0, "bind the clock before stepping"
         hw = hw or self.hw
@@ -206,18 +232,18 @@ class Engine:
     def _decode_fn(self, B: int, schedule: Schedule) -> Callable:
         key = ("decode", B, schedule)
         if key not in self._fns:
-            cfg, axes = self.cfg, self.axes
+            cfg, lay = self.cfg, self.pool.layout
 
             @jax.jit
-            def step(params, pool, slots, tokens, pos, seeds, temps, out_pos,
-                     top_ks):
-                cache = kv_cache.gather(pool, axes, slots)
+            def step(params, pool, slots, tables, tokens, pos, seeds, temps,
+                     out_pos, top_ks):
+                cache = kv_cache.gather(pool, lay, slots, tables)
                 logits, new_cache, _ = forward(
                     params, cfg, tokens[:, None],
                     cache=cache, start_pos=pos, schedule=schedule,
                 )
                 nxt = sample_batch(logits[:, 0], seeds, out_pos, temps, top_ks)
-                pool2 = kv_cache.scatter(pool, axes, slots, new_cache)
+                pool2 = kv_cache.scatter(pool, lay, slots, tables, new_cache)
                 return pool2, nxt
 
             self._fns[key] = step
@@ -226,7 +252,7 @@ class Engine:
     def _prefill_fn(self, P: int) -> Callable:
         key = ("prefill", P)
         if key not in self._fns:
-            cfg, axes = self.cfg, self.axes
+            cfg, lay = self.cfg, self.pool.layout
             n_prefix = cfg.num_prefix_embeds
             rec = self.has_recurrent_state
             schedule = (
@@ -235,10 +261,10 @@ class Engine:
             )
 
             @jax.jit
-            def step(params, pool, slot, tokens, plen, seed, temp, top_k,
-                     prefix_embeds):
+            def step(params, pool, slot, table, tokens, plen, seed, temp,
+                     top_k, prefix_embeds):
                 slots = slot[None]
-                cache = kv_cache.gather(pool, axes, slots)
+                cache = kv_cache.gather(pool, lay, slots, table[None])
                 if n_prefix:
                     tok_embeds = jnp.take(params["embed"], tokens, axis=0)
                     embeds = jnp.concatenate([prefix_embeds, tok_embeds], axis=1)
@@ -261,7 +287,7 @@ class Engine:
                     new_cache = statepool.merge_rows(
                         new_cache, statepool.select_index(per_pos, last[None]),
                     )
-                pool2 = kv_cache.scatter(pool, axes, slots, new_cache)
+                pool2 = kv_cache.scatter(pool, lay, slots, table[None], new_cache)
                 return pool2, tok
 
             self._fns[key] = step
@@ -281,16 +307,16 @@ class Engine:
         rec = self.has_recurrent_state
         key = ("prefill_chunk_rec" if rec else "prefill_chunk", C)
         if key not in self._fns:
-            cfg, axes = self.cfg, self.axes
+            cfg, lay = self.cfg, self.pool.layout
             schedule = (
                 INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
                 else VERIFY_SCHEDULE
             )
 
             @jax.jit
-            def step(params, pool, slot, embeds, start, last):
+            def step(params, pool, slot, table, embeds, start, last):
                 slots = slot[None]
-                cache = kv_cache.gather(pool, axes, slots)
+                cache = kv_cache.gather(pool, lay, slots, table[None])
                 logits, new_cache, per_pos = forward(
                     params, cfg, inputs_embeds=embeds, cache=cache,
                     start_pos=start[None], schedule=schedule,
@@ -301,7 +327,8 @@ class Engine:
                         new_cache,
                         statepool.select_index(per_pos, last[None]),
                     )
-                return kv_cache.scatter(pool, axes, slots, new_cache), logits
+                pool2 = kv_cache.scatter(pool, lay, slots, table[None], new_cache)
+                return pool2, logits
 
             self._fns[key] = step
         return self._fns[key]
@@ -327,21 +354,17 @@ class Engine:
         req.state = State.QUEUED
         self.queue.append(req)
 
-    def _check_capacity(self, req: Request) -> None:
-        """Admission capacity guard: reject a request whose KV footprint
-        (padded prefill extent + output budget + speculation overshoot)
-        cannot fit a slot, instead of silently overflowing the pool.
+    def _worst_need(self, req: Request) -> int:
+        """Worst-case KV positions this request can ever occupy.
 
         A deterministic request reserves ``spec_depth x (W-1) + 1`` verify
         rows past its output budget: up to ``spec_depth`` windows of W-1
         candidates can be in flight at once, and the deepest window's
-        replay writes one verifier token past its last candidate."""
+        replay writes one verifier token past its last candidate.  Peak
+        usage is the MAX of the prefill and decode phases, not their sum —
+        decode/verify writes start at L and overwrite the prefill pad
+        tail."""
         cfg = self.cfg
-        has_full_attn = cfg.attn_kind != "sliding" and any(
-            cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers)
-        )
-        if not has_full_attn:
-            return  # sliding ring buffers wrap; recurrent state is O(1)
         prefix = cfg.num_prefix_embeds or 0
         L = prefix + req.prompt_len
         if self._use_chunked(req):
@@ -354,16 +377,36 @@ class Engine:
             if self.mode == Mode.LLM42 and req.sampling.is_deterministic
             else 0
         )
-        # peak slot usage is the MAX of the two phases, not their sum:
-        # decode/verify writes start at L and overwrite the prefill pad tail
-        need = max(extent, L + req.sampling.max_new_tokens + spec)
-        if need > self.capacity:
+        return max(extent, L + req.sampling.max_new_tokens + spec)
+
+    def _check_capacity(self, req: Request) -> None:
+        """Admission capacity guard, derived from block-pool accounting:
+        reject a request whose worst-case footprint (prefill extent vs
+        prompt + output budget + the ``spec_depth x (W-1) + 1`` verify-row
+        reservation) exceeds the per-request block-table reach
+        (``capacity``) or the whole pool's block supply — instead of
+        silently overflowing.  Transient pressure is NOT rejected here:
+        a request that could *ever* fit queues, and the preemption lane
+        arbitrates the pool at run time."""
+        cfg = self.cfg
+        has_full_attn = cfg.attn_kind != "sliding" and any(
+            cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers)
+        )
+        if not has_full_attn:
+            return  # sliding ring buffers wrap; recurrent state is O(1)
+        need = self._worst_need(req)
+        total_blocks = self.pool.alloc_blocks.num_blocks
+        need_blocks = self._blocks_for(need)
+        if need > self.capacity or need_blocks > total_blocks:
+            prefix = cfg.num_prefix_embeds or 0
             raise ValueError(
                 f"request {req.rid} cannot fit the KV pool: "
-                f"max(prefill extent {extent}, prompt {L} + max_new_tokens "
-                f"{req.sampling.max_new_tokens} + verify rows "
-                f"{spec} [= depth {self.spec_depth} x (W-1) + 1]) = "
-                f"{need} > capacity {self.capacity}"
+                f"max(prefill extent, prompt {prefix + req.prompt_len} + "
+                f"max_new_tokens {req.sampling.max_new_tokens} + verify "
+                f"rows [depth {self.spec_depth} x (W-1) + 1]) = {need} "
+                f"positions = {need_blocks} blocks > per-request capacity "
+                f"{self.capacity} or pool {total_blocks} blocks of "
+                f"{self.pool.block_size}"
             )
 
     def _chunk_size(self) -> int:
@@ -384,36 +427,345 @@ class Engine:
         prefix = self.cfg.num_prefix_embeds or 0
         return prefix + req.prompt_len > self._chunk_size()
 
+    # ------------------------------------------------------------------
+    # block-pool accounting, admission, preemption
+    # ------------------------------------------------------------------
+
+    def _blocks_for(self, positions: int) -> int:
+        """Blocks covering ``positions`` KV slots."""
+        return -(-max(positions, 0) // self.pool.block_size)
+
+    def _alloc_block(self) -> Optional[int]:
+        """One free block, reclaiming LRU zero-ref prefix-cache blocks on
+        demand.  None = pool genuinely exhausted (preemption's cue)."""
+        alloc = self.pool.alloc_blocks
+        bid = alloc.alloc()
+        while bid is None and self.prefix_cache is not None:
+            evicted = self.prefix_cache.evict_lru(alloc)
+            if evicted is None:
+                break
+            self.pool.free_blocks([evicted])
+            bid = alloc.alloc()
+        return bid
+
+    def _grow_blocks(self, req: Request, target_blocks: int) -> bool:
+        """Append private blocks until the table reaches ``target_blocks``;
+        False (with partial growth kept) when the pool is dry."""
+        while len(req.blocks) < target_blocks:
+            bid = self._alloc_block()
+            if bid is None:
+                return False
+            req.blocks.append(bid)
+        return True
+
+    def _ensure_blocks(self, req: Request, end_pos: int) -> bool:
+        """Guarantee the table covers KV positions [0, end_pos), preempting
+        LRU victims (scheduler.BlockMemoryPolicy) when the pool is dry.
+        False = unsatisfiable right now (no victim left): the request
+        stalls this iteration and retries next."""
+        if not self.pool.paged:
+            return True
+        target = self._blocks_for(min(end_pos, self.capacity))
+        while not self._grow_blocks(req, target):
+            cands = [
+                r for r in self.running
+                if r is not req and r.state is not State.PREFILLING
+            ]
+            victim = self.mem_policy.pick_victim(cands, self._now)
+            if victim is None:
+                return False
+            self.preempt(victim)
+        return True
+
+    def _release_blocks(self, req: Request, *, insert: bool) -> None:
+        """Drop the request's block references.  ``insert=True`` first
+        registers the committed-stream prefix with the radix cache (the
+        blocks then stay resident-but-evictable instead of freeing)."""
+        alloc = self.pool.alloc_blocks
+        if insert and self.prefix_cache is not None:
+            stream = self._cacheable_stream(req)
+            n = len(stream) // self.pool.block_size
+            if n:
+                self.prefix_cache.insert(
+                    stream, req.blocks[:n], self._now, alloc
+                )
+        freed = []
+        for bid in req.blocks:
+            if alloc.decref(bid) == 0 and bid not in alloc.cached:
+                freed.append(bid)
+        self.pool.free_blocks(freed)
+        req.blocks = []
+        req.blocks_shared = 0
+
+    def _cacheable_stream(self, req: Request) -> List[int]:
+        """The committed token stream whose KV is deterministic AND
+        resident: the prompt always (prefill runs the fixed schedule in
+        every mode), plus committed output for deterministic traffic
+        (verify-grade by the DVR protocol) and BATCH_INVARIANT mode —
+        minus the last committed token, whose KV is written by the *next*
+        decode and may not exist yet.  Never fast-path non-deterministic
+        output."""
+        det_out = (
+            self.mode == Mode.BATCH_INVARIANT
+            or (self.mode == Mode.LLM42 and req.sampling.is_deterministic)
+        )
+        if det_out and req.committed:
+            return list(req.prompt) + list(req.committed[:-1])
+        return list(req.prompt)
+
+    def _insert_prompt_blocks(self, req: Request) -> None:
+        """Register the freshly prefilled prompt's whole blocks with the
+        prefix cache, so concurrent arrivals with the same system prompt
+        share them immediately."""
+        if self.prefix_cache is None:
+            return
+        n = req.prompt_len // self.pool.block_size
+        if n:
+            self.prefix_cache.insert(
+                req.prompt, req.blocks[:n], self._now,
+                self.pool.alloc_blocks,
+            )
+
     def _admit(self) -> None:
+        # restore lane first: preempted requests re-enter with priority
+        # (their committed work is sunk cost), gated by the memory
+        # policy's anti-thrash hysteresis
+        while self.preempted and len(self.running) < self.max_batch:
+            req = self.preempted[0]
+            avail = (
+                self.pool.alloc_blocks.available()
+                if self.pool.paged else 10 ** 9
+            )
+            need = self._blocks_for(self._worst_need(req))
+            if not self.mem_policy.may_restore(req, avail, need, self._now):
+                break
+            self.preempted.pop(0)
+            self._restore(req)
         while self.queue and self.pool.num_free() > 0 and (
             len(self.running) < self.max_batch
         ):
-            req = self.queue.pop(0)
-            req.slot = self.pool.alloc()
-            if self._use_chunked(req):
-                # third lane: prefill advances chunk-by-chunk via scheduler
-                # plans instead of one exclusive pass at admission
-                self._prepare_prefill(req)
-                req.state = State.PREFILLING
-            else:
-                self._prefill(req)
-                req.state = State.RUNNING
-            self.running.append(req)
+            if not self._try_admit(self.queue[0]):
+                break  # FIFO admission: the head waits for memory
+            self.queue.pop(0)
+
+    def _try_admit(self, req: Request) -> bool:
+        """Admit one queued request if the block pool can cover its prompt
+        (free-block accounting, not dense per-slot reservation): map the
+        longest committed-prefix match to shared cache blocks, allocate
+        private blocks for the tail, and start prefill on the tail only."""
+        cfg = self.cfg
+        prefix = cfg.num_prefix_embeds or 0
+        L = prefix + req.prompt_len
+        alloc = self.pool.alloc_blocks
+        matched: List[int] = []
+        if self.prefix_cache is not None:
+            matched = self.prefix_cache.match(req.prompt, self._now)
+            # the boundary block is never shared: at least the prompt's
+            # last position must run (T0's logits), and it writes KV —
+            # copy-on-write by recompute
+            matched = matched[: (req.prompt_len - 1) // self.pool.block_size]
+        if self.pool.paged:
+            need = self._blocks_for(L) - len(matched)
+            if not self.mem_policy.may_admit(alloc.available(), need):
+                return False
+        for bid in matched:
+            alloc.incref(bid)
+        req.blocks = list(matched)
+        req.blocks_shared = len(matched)
+        req.cached_prefix_tokens = len(matched) * self.pool.block_size
+        if self.pool.paged and not self._grow_blocks(req, self._blocks_for(L)):
+            # raced the watermark (fragmentation vs evictable estimate):
+            # roll back and keep the request queued
+            self._release_blocks(req, insert=False)
+            return False
+        if self.prefix_cache is not None:
+            self.prefix_cache.note_lookup(len(matched))
+        req.slot = self.pool.alloc()
+        cached = req.cached_prefix_tokens
+        if cached:
+            self.events.append({
+                "kind": "cache_hit", "rid": req.rid, "tokens": cached,
+                "iter": self._now,
+            })
+        if self._use_chunked(req) or cached > 0:
+            # third lane: prefill advances chunk-by-chunk via scheduler
+            # plans instead of one exclusive pass at admission; a cache
+            # hit enters the same lane with the cursor past the match
+            self._prepare_prefill(req)
+            req.prefill_pos = cached
+            req.state = State.PREFILLING
+            if not self._use_chunked(req):
+                # cache-hit tail under the exclusive-prefill engine: run
+                # the tail synchronously (legacy admission semantics)
+                self._prefill_tail_sync(req)
+        else:
+            self._prefill(req)
+            req.state = State.RUNNING
+        self.running.append(req)
+        return True
+
+    def _flush_pipeline(self, req: Request) -> None:
+        """Force-apply every in-flight verdict in submission order.  The
+        discrete-event engine computes verdicts eagerly at launch — only
+        their *visibility* is deferred — so an early flush commits exactly
+        the tokens that would have committed anyway (in-order splices,
+        cascades included).  Device state work is skipped: the caller is
+        about to evict the slot's KV and the restore replay rebuilds
+        recurrent state from the committed stream."""
+        for outcome in pipeline.apply_ready(req, self.window, float("inf")):
+            self.statepool.note_splice(req.slot, len(outcome.cascaded))
+        self.statepool.note_preempt(req.slot)
+
+    def preempt(self, req: Request) -> bool:
+        """Evict a running request's KV blocks (the memory policy's lane,
+        and a test hook for adversarial eviction schedules).  The request
+        keeps its slot, its committed stream and its statepool replay
+        anchor; fresh speculation is dropped (uncommitted by definition)
+        and in-flight verdicts are flushed first — so the committed stream
+        is untouched, which is what makes the later restore-by-recompute
+        bitwise-identical."""
+        if req not in self.running or req.state is State.PREFILLING:
+            return False
+        self._flush_pipeline(req)
+        if req.finished():
+            # the flushed verdicts completed the request: retire instead
+            self._finish(req)
+            return True
+        dropped = len(req.candidates)
+        req.candidates = []
+        req.num_preempted_tokens += dropped
+        req.num_preemptions += 1
+        req.preempt_iter = self._now
+        # committed-prefix blocks go to the radix cache (evictable, so the
+        # pool reclaims them LRU — and an early restore may re-match them);
+        # the speculative tail frees outright
+        self._release_blocks(req, insert=True)
+        req.state = State.PREEMPTED
+        self.running.remove(req)
+        self.preempted.append(req)
+        self.num_preemptions += 1
+        self.events.append({
+            "kind": "preempt", "rid": req.rid, "iter": self._now,
+            "dropped_tokens": dropped, "committed": len(req.committed),
+        })
+        return True
+
+    def _restore(self, req: Request) -> None:
+        """Re-admit a preempted request by deterministic recompute: replay
+        its committed stream (prompt + committed[:-1] — the last committed
+        token's KV is written by the resuming decode, exactly as in the
+        un-preempted flow) through the chunked-prefill lane.  The replay
+        runs the fixed verify-grade schedule, and every committed
+        position's KV was verify-grade before eviction, so the rebuilt
+        cache — and, on recurrent archs, the rebuilt state and replay
+        anchor — is bitwise-identical by construction.  Blocks still
+        resident in the prefix cache are re-matched instead of
+        recomputed."""
+        stream = list(req.prompt) + list(req.committed[:-1])
+        # the replay starts from position 0 on a pristine state row: the
+        # slot survived preemption, but its live recurrent state (and any
+        # sliding ring content) is post-speculation — NOT the state a
+        # fresh prefill would start from
+        self.pool.reset_slot(req.slot)
+        alloc = self.pool.alloc_blocks
+        matched: List[int] = []
+        if self.prefix_cache is not None:
+            # a replay samples nothing, so a full-stream match needs no
+            # recompute at all — the boundary rule only bounds matches to
+            # whole blocks, which the radix walk does by construction
+            matched = self.prefix_cache.match(stream, self._now)
+        for bid in matched:
+            alloc.incref(bid)
+        req.blocks = list(matched)
+        req.blocks_shared = len(matched)
+        self._prepare_prefill(req, stream=stream)
+        req.prefill_pos = len(matched) * self.pool.block_size
+        req.replaying = True
+        ok = self._grow_blocks(
+            req, self._blocks_for((self.cfg.num_prefix_embeds or 0)
+                                  + len(stream))
+        )
+        assert ok, "restore gate admitted a replay the pool cannot hold"
+        self.num_restores += 1
+        self.restored_tokens += max(req.prefill_total - req.prefill_pos, 0)
+        self.events.append({
+            "kind": "restore", "rid": req.rid, "iter": self._now,
+            "replay_tokens": max(req.prefill_total - req.prefill_pos, 0),
+            "rematched_blocks": len(matched),
+        })
+        self.running.append(req)
+        if req.prefill_pos >= req.prefill_total:
+            # everything survived in the cache: nothing to recompute
+            self._finish_prefill(req, sample=False)
+        else:
+            # a restore always re-enters via PREFILLING: the replay rides
+            # the third lane when chunking is on, else runs synchronously
+            req.state = State.PREFILLING
+            if not self.chunked_prefill:
+                self._prefill_tail_sync(req)
+
+    def _prefill_tail_sync(self, req: Request) -> None:
+        """Exclusive (synchronous) prefill of the remaining
+        ``[prefill_pos, prefill_total)`` span — the cache-hit tail or a
+        restore replay under a non-chunked engine.  One fixed-shape pass
+        sized to the tail's power-of-two bucket (capped at the sliding
+        window's ring contract), looped to completion; emits one legacy
+        ``prefill`` event."""
+        start = req.prefill_pos
+        replay = req.replaying
+        C = _bucket(max(req.prefill_total - start, 1))
+        if self.cfg.attn_kind == "sliding":
+            C = min(C, self.cfg.window)
+        wall = 0.0
+        while req.prefill_pos < req.prefill_total:
+            wall += self._prefill_advance(req, C)["wall"]
+        ev = {
+            "kind": "prefill", "tokens": req.prefill_total - start,
+            "padded": -(-(req.prefill_total - start) // C) * C,
+            "wall": wall, "iter": self._now, "cached": start,
+            "replay": replay,
+        }
+        self.runtime.charge(ev)
+        self.events.append(ev)
+
+    def mem_stats(self) -> Dict[str, Any]:
+        """Serve-loop memory-subsystem telemetry: block-pool occupancy,
+        prefix-cache hit rates, preemption/restore counts."""
+        alloc = self.pool.alloc_blocks
+        out: Dict[str, Any] = {
+            "block_size": self.pool.block_size,
+            "num_blocks": alloc.num_blocks,
+            "blocks_in_use": alloc.in_use(),
+            "peak_blocks_in_use": alloc.peak_in_use,
+            "free_blocks": alloc.num_free(),
+            "num_preemptions": self.num_preemptions,
+            "num_restores": self.num_restores,
+            "restored_tokens": self.restored_tokens,
+            "peak_running": self.peak_running,
+            "paged": self.pool.paged,
+        }
+        if self.prefix_cache is not None:
+            out.update(self.prefix_cache.stats())
+        return out
 
     def _build_cross(self, req: Request) -> None:
         assert req.enc_embeds is not None, "encdec request needs enc_embeds"
         cross = self._cross_fn(req.enc_embeds.shape[1])(self.params, req.enc_embeds)
         slot = jnp.array([req.slot])
         cross_axes = {"k": 1, "v": 1, "mask": 0}
-        self.pool.data["cross"] = kv_cache.scatter(
+        self.pool.data["cross"] = kv_cache.scatter_slots(
             self.pool.data["cross"], cross_axes, slot, cross
         )
 
-    def _prepare_prefill(self, req: Request) -> None:
+    def _prepare_prefill(
+        self, req: Request, stream: Optional[List[int]] = None
+    ) -> None:
         """Host-side setup for chunk-resumable prefill: side inputs (cross
         cache, prefix embeds) and the chunk cursor.  Chunks embed their own
         token slice on demand (``_chunk_embeds``), so residency stays
-        O(chunk), not O(prompt)."""
+        O(chunk), not O(prompt).  ``stream`` overrides the fed tokens — a
+        restore replay feeds prompt + committed[:-1] instead of the
+        prompt."""
         cfg = self.cfg
         req._prefix_len = cfg.num_prefix_embeds
         if cfg.family == "encdec":
@@ -425,21 +777,25 @@ class Engine:
                     (1, cfg.num_prefix_embeds, cfg.d_model), jnp.dtype(cfg.dtype)
                 )
             req._prefix_src = prefix
-        req.prefill_total = (cfg.num_prefix_embeds or 0) + req.prompt_len
+        req.prefill_stream = (
+            list(stream) if stream is not None else list(req.prompt)
+        )
+        req.prefill_total = (cfg.num_prefix_embeds or 0) + len(req.prefill_stream)
         req.prefill_pos = 0
 
     def _chunk_embeds(self, req: Request, s: int, C: int) -> jax.Array:
         """Input embeddings for prefill positions [s, s+C): prefix embeds
         where the chunk overlaps the prefix region, token embeddings for
-        the prompt slice.  At most C real positions materialize."""
+        the fed-stream slice.  At most C real positions materialize."""
         prefix = getattr(req, "_prefix_len", 0) or 0
+        stream = req.prefill_stream
         parts = []
         if s < prefix:
             parts.append(req._prefix_src[:, s : min(prefix, s + C)])
         lo = max(s - prefix, 0)
-        hi = min(s + C - prefix, req.prompt_len)
+        hi = min(s + C - prefix, len(stream))
         if hi > lo:
-            toks = jnp.array([req.prompt[lo:hi]], jnp.int32)
+            toks = jnp.array([stream[lo:hi]], jnp.int32)
             parts.append(jnp.take(self.params["embed"], toks, axis=0))
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
@@ -451,11 +807,40 @@ class Engine:
             )
         return self._pad_row
 
+    def _finish_prefill(
+        self, req: Request, *, sample: bool, logits=None, last_rel: int = 0
+    ) -> None:
+        """Prefill-completion bookkeeping, shared by the chunk lane and the
+        zero-recompute restore path.  ``sample=True`` commits T0 from the
+        final chunk's logits; a restore replay skips it (T0 — and
+        everything after — is already committed)."""
+        if sample:
+            tok = sample_token(
+                logits[0, last_rel], jnp.int32(req.sampling.seed),
+                jnp.int32(0), jnp.float32(req.sampling.temperature),
+                jnp.int32(req.sampling.top_k),
+            )
+            req.committed.append(int(tok))  # T0: deterministic by construction
+        # commit point == post-stream state: the verify replay anchor (on a
+        # replay, the state after committed[:-1] — exactly what the next
+        # anchored window starts from)
+        self.statepool.set_commit_point(self.pool.data, req.slot)
+        if req.prefill_time < 0:
+            req.prefill_time = self._now
+        req.state = State.RUNNING
+        req._prefix_src = None
+        if req.replaying:
+            req.replaying = False
+            req.restore_iter = self._now
+        else:
+            self._insert_prompt_blocks(req)
+
     def _prefill_advance(self, req: Request, C: int) -> Dict[str, Any]:
         """Advance one fixed-shape C-token prefill chunk; the final chunk
-        samples T0 and flips the request to RUNNING.  Pad positions embed
-        token 0 (exactly the legacy padded passes); their KV lands past the
-        prompt and is overwritten by decode before it can ever mask in."""
+        samples T0 (unless this is a restore replay) and flips the request
+        to RUNNING.  Pad positions embed token 0 (exactly the legacy padded
+        passes); their writes land past the allocated block table and are
+        absorbed by the pool's scratch block."""
         s = req.prefill_pos
         total = req.prefill_total
         emb = self._chunk_embeds(req, s, C)
@@ -463,29 +848,26 @@ class Engine:
         if real < C:
             pad = jnp.broadcast_to(self._pad_embed(), (1, C - real, emb.shape[2]))
             emb = jnp.concatenate([emb, pad], axis=1)
+        table = self.pool.table_array([req.blocks])[0]
         t0 = time.perf_counter()
         self.pool.data, logits = self._prefill_chunk_fn(C)(
-            self.params, self.pool.data, jnp.int32(req.slot), emb,
+            self.params, self.pool.data, jnp.int32(req.slot), table, emb,
             jnp.int32(s), jnp.int32(max(real - 1, 0)),
         )
         wall = time.perf_counter() - t0
+        req.last_sched = self._now
         req.prefill_pos = s + real
         done = req.prefill_pos >= total
+        replay = req.replaying
         if done:
-            tok = sample_token(
-                logits[0, total - 1 - s], jnp.int32(req.sampling.seed),
-                jnp.int32(0), jnp.float32(req.sampling.temperature),
-                jnp.int32(req.sampling.top_k),
+            self._finish_prefill(
+                req, sample=not replay, logits=logits,
+                last_rel=total - 1 - s,
             )
-            # commit point == post-prompt state: first verify replay anchor
-            self.statepool.set_commit_point(self.pool.data, req.slot)
-            req.committed.append(int(tok))  # T0: deterministic by construction
-            req.prefill_time = self._now
-            req.state = State.RUNNING
-            req._prefix_src = None
         return {
             "kind": "prefill_chunk", "tokens": real, "padded": C, "start": s,
             "wall": wall, "iter": self._now, "rid": req.rid, "done": done,
+            "replay": replay,
         }
 
     def _prefill(self, req: Request) -> None:
@@ -507,18 +889,21 @@ class Engine:
             prefix = jnp.zeros(
                 (1, cfg.num_prefix_embeds, cfg.d_model), jnp.dtype(cfg.dtype)
             )
+        table = self.pool.table_array([req.blocks])[0]
         t0 = time.perf_counter()
         self.pool.data, tok = self._prefill_fn(P)(
-            self.params, self.pool.data, jnp.int32(req.slot), tokens,
+            self.params, self.pool.data, jnp.int32(req.slot), table, tokens,
             jnp.int32(req.prompt_len), jnp.int32(req.sampling.seed),
             jnp.float32(req.sampling.temperature),
             jnp.int32(req.sampling.top_k), prefix,
         )
         wall = time.perf_counter() - t0
+        req.last_sched = self._now
         # commit point == post-prompt state: first verify replay anchor
         self.statepool.set_commit_point(self.pool.data, req.slot)
         req.committed.append(int(tok))  # T0: deterministic by construction
         req.prefill_time = self._now
+        self._insert_prompt_blocks(req)
         ev = {
             "kind": "prefill", "tokens": req.prompt_len + (cfg.num_prefix_embeds or 0),
             "padded": P + (cfg.num_prefix_embeds or 0), "wall": wall, "iter": self._now,
@@ -544,10 +929,14 @@ class Engine:
         self.runtime.charge(ev)
         self.events.append(ev)
 
-    def _view(self) -> sched.SchedulerView:
-        """Snapshot handed to the schedule policy each iteration."""
+    def _view(self, stalled: Optional[Set[int]] = None) -> sched.SchedulerView:
+        """Snapshot handed to the schedule policy each iteration.
+        ``stalled`` rids (block-pool pressure with no victim left) are
+        hidden from the policy — they retry next iteration."""
+        stalled = stalled or set()
+        visible = tuple(r for r in self.running if r.rid not in stalled)
         return sched.SchedulerView(
-            running=tuple(self.running),
+            running=visible,
             mode=self.mode,
             window=self.window,
             group=self.group,
@@ -557,15 +946,16 @@ class Engine:
             # restore from the window's ring checkpoint
             speculate_past_inflight=True,
             now=self._now,
-            verify_latency=self.verify_latency,
             prefilling=tuple(
-                r for r in self.running if r.state is State.PREFILLING
+                r for r in visible if r.state is State.PREFILLING
             ),
             now_time=self.runtime.now,
             verify_inflight=sum(len(r.pipeline) for r in self.running),
             verify_backlog=self.runtime.verify_backlog,
             acceptance={r.rid: r.accept_ema for r in self.running},
             spec_depth=self.spec_depth,
+            free_blocks=self.pool.num_free_blocks(),
+            num_preempted=len(self.preempted),
         )
 
     # ------------------------------------------------------------------
@@ -579,6 +969,7 @@ class Engine:
         else:
             schedule = self.policy.schedule_for(B)
         slots = jnp.array([r.slot for r in batch], jnp.int32)
+        tables = self.pool.table_array([r.blocks for r in batch])
         last_tok, pos, out_pos, seeds, temps, top_ks = [], [], [], [], [], []
         for r in batch:
             # speculation order: committed, in-flight window, fresh candidates
@@ -590,9 +981,10 @@ class Engine:
             seeds.append(r.sampling.seed)
             temps.append(r.sampling.temperature)
             top_ks.append(r.sampling.top_k)
+            r.last_sched = self._now
         t0 = time.perf_counter()
         self.pool.data, nxt = self._decode_fn(B, schedule)(
-            self.params, self.pool.data, slots,
+            self.params, self.pool.data, slots, tables,
             jnp.array(last_tok, jnp.int32), jnp.array(pos, jnp.int32),
             jnp.array(seeds, jnp.int32), jnp.array(temps, jnp.float32),
             jnp.array(out_pos, jnp.int32), jnp.array(top_ks, jnp.int32),
@@ -624,8 +1016,8 @@ class Engine:
         (``core.pipeline``, up to ``spec_depth`` windows deep) and the
         pass is launched on the verify *stream* — its verdict becomes
         visible when the stream completes the pass plus the modeled extra
-        latency (``verify_latency_ms``; ``verify_latency`` ticks under the
-        logical shim), and splices strictly in submission order.  The
+        latency (``verify_latency_ms``; one tick under the logical
+        clock), and splices strictly in submission order.  The
         device pass still executes eagerly (host-sequential simulation of
         an async verify stream), so its KV repair is in place before any
         later cache read — in particular before the next chained window of
@@ -645,6 +1037,7 @@ class Engine:
             [], [], [], [], [], [], [], [], []
         )
         ring_idxs = []
+        table_rows: List[List[int]] = []
         for r in rows:
             i, c, cl, sp, ob = dvr.build_verify_row(r, W)
             inputs.append(i)
@@ -656,6 +1049,8 @@ class Engine:
             seeds.append(r.sampling.seed)
             temps.append(r.sampling.temperature)
             tks.append(r.sampling.top_k)
+            table_rows.append(r.blocks)
+            r.last_sched = self._now
             if defer:
                 assert len(r.pipeline) < self.spec_depth, (
                     "scheduler plan exceeds the configured spec_depth"
@@ -674,9 +1069,14 @@ class Engine:
             temps.append(0.0)
             tks.append(0)
             ring_idxs.append(0)
+            # pad rows carry an empty block table: reads hit the frozen
+            # null block, writes are absorbed by the scratch block
+            table_rows.append([])
         t0 = time.perf_counter()
         args = (
-            jnp.array(slots, jnp.int32), jnp.array(starts, jnp.int32),
+            jnp.array(slots, jnp.int32),
+            self.pool.table_array(table_rows),
+            jnp.array(starts, jnp.int32),
             jnp.array(inputs, jnp.int32), jnp.array(cands, jnp.int32),
             jnp.array(cand_lens, jnp.int32), jnp.array(seeds, jnp.int32),
             jnp.array(temps, jnp.float32), jnp.array(bases, jnp.int32),
@@ -726,6 +1126,19 @@ class Engine:
                     )
         return ev
 
+    def _finish(self, req: Request) -> None:
+        """Retire one request: committed-stream blocks go to the prefix
+        cache (commit-aware insertion — ``_cacheable_stream``), the rest
+        free, and the slot's dense rows are wiped for the next owner."""
+        req.state = State.FINISHED
+        req.finish_time = self._now
+        self.running.remove(req)
+        self._release_blocks(req, insert=True)
+        self.pool.free(req.slot)
+        self.statepool.note_release(req.slot)
+        req.slot = -1
+        self.finished.append(req)
+
     def _retire(self) -> None:
         done = [r for r in self.running if r.finished() or (
             not r.sampling.is_deterministic and r.done_decoding()
@@ -736,13 +1149,7 @@ class Engine:
                 r.candidates or r.pipeline
             ):
                 continue
-            r.state = State.FINISHED
-            r.finish_time = self._now
-            self.running.remove(r)
-            self.pool.free(r.slot)
-            self.statepool.note_release(r.slot)
-            r.slot = -1
-            self.finished.append(r)
+            self._finish(r)
 
     # ------------------------------------------------------------------
     # main loop
@@ -778,10 +1185,12 @@ class Engine:
         applied = self._apply_due_verdicts()
         self._retire()
         self._admit()
-        if not self.running and not self.queue:
+        if not self.running and not self.queue and not self.preempted:
             return False
+        self.peak_running = max(self.peak_running, len(self.running))
 
-        view = self._view()
+        stalled = self._ensure_memory()
+        view = self._view(stalled)
         plan = self.scheduler.plan(view)
         pev = dev = vev = None
         if plan.prefill is not None:
@@ -812,7 +1221,36 @@ class Engine:
             self.events.append(present[0][1])
         if present or applied:
             return True
-        return bool(self.running or self.queue)
+        return bool(self.running or self.queue or self.preempted)
+
+    def _ensure_memory(self) -> Set[int]:
+        """Pre-plan memory phase: grow every running request's block table
+        to cover this iteration's worst-case writes (one decode token past
+        the live sequence; a prefill chunk for the third lane), preempting
+        LRU victims on exhaustion.  Returns the rids that could not be
+        covered — they are hidden from the scheduler this iteration.
+        Verify writes never exceed the decode bound for *real* content:
+        window pad positions land past the table and are absorbed by the
+        scratch block."""
+        if not self.pool.paged:
+            return set()
+        stalled: Set[int] = set()
+        for r in list(self.running):
+            if r not in self.running:
+                continue  # preempted by an earlier request's growth
+            prefix = getattr(r, "_prefix_len", 0) or 0
+            if r.state is State.PREFILLING:
+                chunk = (
+                    self._chunk_size() if self.chunked_prefill
+                    else r.prefill_total - r.prefill_pos
+                )
+                end = min(r.prefill_pos + max(chunk, 1), r.prefill_total)
+            else:
+                seq = len(r.committed) + len(r.speculation)
+                end = r.prompt_len + prefix + seq
+            if not self._ensure_blocks(r, end):
+                stalled.add(r.rid)
+        return stalled
 
     def _apply_due_verdicts(self) -> bool:
         """Land in-flight verify results whose stream-clock deadline has
@@ -855,5 +1293,7 @@ class Engine:
         for _ in range(max_iters):
             if not self.step():
                 break
-        assert not self.running and not self.queue, "engine did not drain"
+        assert not (self.running or self.queue or self.preempted), (
+            "engine did not drain"
+        )
         return self.finished

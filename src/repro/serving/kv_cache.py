@@ -1,33 +1,47 @@
-"""Slot-pool cache manager.
+"""Paged cache manager: slot pool for O(1) state + block pool for KV.
 
-The pool holds per-request recurrent state (attention KV ring buffers /
-ssm states / rwkv states — whatever ``models.transformer.cache_spec``
-says the architecture needs) for ``num_slots`` concurrent requests plus one
-*scratch slot* used as the write target for padding rows in grouped
-verification (so fixed-shape verify passes never corrupt a live request).
+Historically this module bound one dense ``capacity``-long KV ring to every
+slot; since the paged-KV subsystem (``serving.blockpool``) the layout is
+split by leaf kind:
 
-``gather(slots)`` / ``scatter(slots, cache)`` convert between the pool
-layout and per-step batched caches; batch axes differ per leaf (layer-
-stacked leaves carry the batch at axis 1), so the axis map is derived once
-from a sentinel-sized spec.
+* **slot leaves** — recurrent O(1) state (mamba conv/ssm, rwkv shift/wkv),
+  sliding-window rings (bounded at ``window + RING_SLACK``) and encdec
+  cross caches keep the dense per-slot layout, ``num_slots`` rows plus one
+  *scratch slot* used as the write target for padding rows in grouped
+  verification;
+* **paged leaves** — full-attention ``k``/``v``/``pos`` leaves are cut
+  into a global pool of ``block_size``-token blocks, allocated on demand
+  as sequences grow, ref-counted so the prefix cache can share committed
+  prefixes read-only, and reclaimed (wiped) on free.
+
+``gather`` / ``scatter`` convert between the pool layout and per-step
+batched caches: slot leaves index by ``slots`` (B,), paged leaves
+assemble / disassemble per-row ``(B, view_capacity, ...)`` views through
+block ``tables`` (B, blocks_per_table) int32 with ``-1`` marking
+unallocated entries (reads hit the frozen null block, writes are absorbed
+by the scratch block).  The forward pass is unchanged — its ``pos`` mask
+already handles every hole the paged view can present.
 """
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.base import ModelConfig
-from repro.models.transformer import cache_spec, init_cache
-
+from repro.models.transformer import cache_spec
+from repro.serving import blockpool
+from repro.serving.blockpool import BlockAllocator, Layout  # noqa: F401
 
 _SENTINEL = 1717
 
 
 def batch_axes(cfg: ModelConfig) -> Any:
-    """Pytree (cache structure) of the batch-dim index per leaf."""
+    """Pytree (cache structure) of the batch-dim index per leaf — the
+    legacy dense axes map, still used for slot-shaped side caches (the
+    encdec cross cache) and by the state pool's axis convention."""
     spec = cache_spec(cfg, _SENTINEL, _SENTINEL + 1)
 
     def axis_of(s: jax.ShapeDtypeStruct) -> int:
@@ -38,13 +52,16 @@ def batch_axes(cfg: ModelConfig) -> Any:
     return jax.tree_util.tree_map(axis_of, spec)
 
 
-def gather(pool: Any, axes: Any, slots: jax.Array) -> Any:
+def gather_slots(pool: Any, axes: Any, slots: jax.Array) -> Any:
+    """Dense slot gather over an explicit axes map (legacy helper)."""
     return jax.tree_util.tree_map(
         lambda a, ax: jnp.take(a, slots, axis=ax), pool, axes
     )
 
 
-def scatter(pool: Any, axes: Any, slots: jax.Array, update: Any) -> Any:
+def scatter_slots(pool: Any, axes: Any, slots: jax.Array, update: Any) -> Any:
+    """Dense slot scatter over an explicit axes map (legacy helper)."""
+
     def put(a, ax, u):
         idx = (slice(None),) * ax + (slots,)
         return a.at[idx].set(u.astype(a.dtype))
@@ -52,17 +69,46 @@ def scatter(pool: Any, axes: Any, slots: jax.Array, update: Any) -> Any:
     return jax.tree_util.tree_map(put, pool, axes, update)
 
 
-class CachePool:
-    """Mutable host-side wrapper around the pooled cache pytree."""
+#: paged-aware entry points (slot + block-table addressing)
+gather = blockpool.gather
+scatter = blockpool.scatter
 
-    def __init__(self, cfg: ModelConfig, num_slots: int, capacity: int):
+
+class CachePool:
+    """Mutable host-side wrapper around the pooled cache pytree.
+
+    ``num_slots`` slots of O(1)/ring state (+1 scratch) plus ``num_blocks``
+    KV blocks of ``block_size`` tokens (+ null + scratch blocks).  The
+    default pool size matches the dense manager's footprint exactly —
+    ``num_slots * ceil(capacity / block_size)`` blocks — so existing
+    configurations keep their admission behaviour; production deployments
+    size ``num_blocks`` to the HBM budget instead.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        num_slots: int,
+        capacity: int,
+        *,
+        block_size: int = blockpool.DEFAULT_BLOCK_SIZE,
+        num_blocks: Optional[int] = None,
+    ):
         self.cfg = cfg
         self.num_slots = num_slots
         self.capacity = capacity
-        self.axes = batch_axes(cfg)
-        # +1 scratch slot for grouped-verification padding rows
-        self.data = init_cache(cfg, num_slots + 1, capacity)
+        bpt = -(-capacity // block_size)
+        if num_blocks is None:
+            num_blocks = num_slots * bpt  # dense-parity HBM footprint
+        self.layout = blockpool.build_layout(
+            cfg, capacity, block_size, num_blocks
+        )
+        self.axes = batch_axes(cfg)  # legacy map (cross-cache scatter)
+        self.data = blockpool.init_cache(cfg, self.layout, num_slots)
+        self.alloc_blocks = BlockAllocator(num_blocks)
         self._free: List[int] = list(range(num_slots))
+
+    # -- slots (O(1) state rows) ----------------------------------------
 
     @property
     def scratch_slot(self) -> int:
@@ -72,15 +118,50 @@ class CachePool:
         return self._free.pop(0)
 
     def free(self, slot: int) -> None:
-        # reset the slot's position book-keeping so stale entries never mask in
-        def wipe(a, ax):
-            idx = (slice(None),) * ax + (slot,)
-            if a.dtype == jnp.int32:
-                return a.at[idx].set(-1)
-            return a.at[idx].set(jnp.zeros_like(a[idx]))
-
-        self.data = jax.tree_util.tree_map(wipe, self.data, self.axes)
+        # reset the slot's dense leaves so stale entries never mask in
+        self.reset_slot(slot)
         self._free.append(slot)
+
+    def reset_slot(self, slot: int) -> None:
+        """Wipe a slot's dense leaves to pristine (recurrent state to
+        zeros, ring positions to -1) without releasing it — a restore
+        replay must start from exactly the state a fresh slot would have,
+        not from the victim's stale post-speculation state."""
+        self.data = blockpool.wipe_slot(self.data, self.layout, slot)
 
     def num_free(self) -> int:
         return len(self._free)
+
+    # -- blocks ----------------------------------------------------------
+
+    @property
+    def paged(self) -> bool:
+        return self.layout.has_paged
+
+    @property
+    def block_size(self) -> int:
+        return self.layout.block_size
+
+    @property
+    def blocks_per_table(self) -> int:
+        return self.layout.blocks_per_table
+
+    def num_free_blocks(self) -> int:
+        return self.alloc_blocks.num_free()
+
+    def free_blocks(self, bids: List[int]) -> None:
+        """Wipe + return zero-ref, uncached blocks to the free list."""
+        if not bids:
+            return
+        self.data = blockpool.wipe_blocks(self.data, self.layout, bids)
+        for bid in bids:
+            self.alloc_blocks.release(bid)
+
+    def table_array(self, blocks_list: Sequence[Sequence[int]]) -> jax.Array:
+        """(B, blocks_per_table) int32 tables, ``-1``-padded."""
+        nblk = self.layout.blocks_per_table
+        rows = []
+        for blocks in blocks_list:
+            assert len(blocks) <= nblk, "block table exceeds view capacity"
+            rows.append(list(blocks) + [-1] * (nblk - len(blocks)))
+        return jnp.array(rows, jnp.int32)

@@ -62,7 +62,9 @@ def run_online(
 
     for _ in range(max_iters):
         admit()
-        if not pending and not engine.running and not engine.queue:
+        if not pending and not engine.running and not engine.queue and (
+            not engine.preempted
+        ):
             break
         # the runtime's event-driven skip (verdict-gated idle iterations)
         # must never jump past the next arrival — the main stream is free
@@ -82,10 +84,11 @@ def run_online(
             engine.runtime.idle_until(pending[0][1])  # idle until next arrival
     # re-check after the loop: a workload that drains on exactly the last
     # permitted step is complete, not truncated
-    if pending or engine.running or engine.queue:
+    if pending or engine.running or engine.queue or engine.preempted:
         msg = (
             f"run_online exhausted max_iters={max_iters} before draining: "
             f"{len(engine.running)} running, {len(engine.queue)} queued, "
+            f"{len(engine.preempted)} preempted awaiting restore, "
             f"{len(pending)} not yet arrived; latency/TTFT dicts would be "
             f"partial ({len(latency)}/{len(requests)} finished)"
         )

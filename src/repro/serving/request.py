@@ -18,6 +18,7 @@ class State(enum.Enum):
     PREFILLING = "prefilling"  # admitted; prompt advancing chunk by chunk
     RUNNING = "running"  # decoding (candidates may be outstanding)
     AWAITING_VERIFY = "awaiting_verify"  # candidate window full, needs verify
+    PREEMPTED = "preempted"  # KV blocks evicted; committed stream retained
     FINISHED = "finished"
 
 
@@ -77,11 +78,23 @@ class Request:
     # --- runtime state (engine-managed) ---
     state: State = State.QUEUED
     slot: int = -1
+    # paged-KV block table (serving.blockpool): block j holds this
+    # request's full-attention KV for absolute positions
+    # [j * block_size, (j+1) * block_size).  The first ``blocks_shared``
+    # entries are read-only prefix-cache blocks (refcounted, never written
+    # — all writes land past the committed-prefix match by construction).
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    blocks_shared: int = 0
     # chunk-resumable prefill progress (chunked-prefill lane): positions
     # [0, prefill_pos) of the input sequence (prefix embeds + prompt) are
     # already written into the cache; prefill_total is the full length.
+    # ``prefill_stream`` is the token stream the lane feeds: the prompt
+    # on admission, prompt + committed[:-1] on a post-preemption restore
+    # replay (``replaying`` skips the T0 sample — T0 is already committed).
     prefill_pos: int = 0
     prefill_total: int = 0
+    prefill_stream: Optional[List[int]] = None
+    replaying: bool = False
     committed: List[int] = dataclasses.field(default_factory=list)
     candidates: List[int] = dataclasses.field(default_factory=list)
     # FIFO of windows submitted for verification while decoding continues
@@ -94,6 +107,15 @@ class Request:
     # verdict.  Starts optimistic; AdaptivePolicy reads it to demote
     # high-flip requests to pause-style verification (and promote back).
     accept_ema: float = 1.0
+    # preemption / memory-pressure bookkeeping (serving.blockpool lane):
+    # last_sched drives the LRU victim choice; preempt_iter / restore_iter
+    # feed the anti-thrash hysteresis in scheduler.BlockMemoryPolicy
+    last_sched: int = 0
+    preempt_iter: int = -(10 ** 9)
+    restore_iter: int = -(10 ** 9)
+    num_preemptions: int = 0
+    num_preempted_tokens: int = 0  # speculation dropped at preemption
+    cached_prefix_tokens: int = 0  # prompt tokens served by the prefix cache
     # stats
     num_rollbacks: int = 0
     num_recomputed_tokens: int = 0

@@ -76,10 +76,6 @@ class SchedulerView:
     #: False for ssm/hybrid archs: no speculation past an in-flight window
     speculate_past_inflight: bool
     now: int  # logical iteration counter
-    #: iterations until a launched verdict lands (Engine.verify_latency);
-    #: deprecated — under a costed clock deadlines come from the verify
-    #: stream (serving.streams) and --verify-latency-ms
-    verify_latency: int = 1
     #: requests mid chunked-prefill (State.PREFILLING), admission order;
     #: empty when the engine runs legacy exclusive prefill (chunk size 0)
     prefilling: tuple = ()
@@ -101,6 +97,13 @@ class SchedulerView:
     #: adaptive policy scales depth with acceptance) but never deeper —
     #: the state pool holds exactly this many checkpoint buffers per slot
     spec_depth: int = 1
+    #: paged-KV memory telemetry (serving.blockpool): free blocks in the
+    #: pool right now, and requests currently preempted (blocks evicted,
+    #: waiting on the restore lane).  Policies may read these to shape
+    #: speculation depth under memory pressure; admission/preemption
+    #: themselves are the engine's BlockMemoryPolicy's job.
+    free_blocks: int = 0
+    num_preempted: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,8 +187,9 @@ class SchedulePolicy(abc.ABC):
 
     name: str = "abstract"
     #: True => verify verdicts go through per-request in-flight state and
-    #: land ``Engine.verify_latency`` iterations after launch; False => the
-    #: verdict is applied synchronously inside the verify pass (seed flow).
+    #: land at their verify-stream deadline (serving.streams); False =>
+    #: the verdict is applied synchronously inside the verify pass (seed
+    #: flow).
     defers_verify: bool = False
 
     @abc.abstractmethod
@@ -434,6 +438,69 @@ class AdaptivePolicy(SchedulePolicy):
         ready = self._promoted_ready(view)
         det_pool = [r for r in view.running if r.rid not in self._demoted]
         return self._overlap._compose(view, ready, dec, det_pool)
+
+
+class BlockMemoryPolicy:
+    """Admission + preemption policy for the paged KV block pool.
+
+    The scheduler's verify/decode policies above decide what RUNS each
+    iteration; this policy decides who gets MEMORY when the block pool
+    runs dry:
+
+    * **victim choice** — least-recently-scheduled (LRU) among the running
+      requests, deterministic ``(last_sched, rid)`` tie-break.  Requests
+      mid-prefill are never preempted (they have committed nothing — their
+      replay anchor does not exist yet), and the engine excludes the
+      requester itself.
+    * **anti-thrash hysteresis** — (a) a freshly *restored* request is
+      passed over as a victim for ``restore_cooldown`` iterations unless
+      every candidate is equally fresh (preempting what you just replayed
+      is pure thrash — but forward progress beats fairness, so the shield
+      is advisory, never absolute); (b) a preempted request re-admits only
+      once ``restore_cooldown`` iterations have passed since ITS
+      preemption AND the pool can cover its full worst-case need plus
+      ``watermark_blocks`` of headroom — a restore that would immediately
+      preempt someone else (or be re-preempted itself) never starts.
+
+    Preemption is *safe* by the commit rule: the victim keeps its slot
+    (recurrent state rows are O(1) — the memory being reclaimed is KV
+    blocks), its committed stream, and its statepool replay anchor; the
+    restore replays only committed tokens through the chunked-prefill
+    lane, which is bitwise-identical by construction.
+    """
+
+    name = "block-lru"
+
+    def __init__(self, watermark_blocks: int = 0, restore_cooldown: int = 8):
+        assert watermark_blocks >= 0 and restore_cooldown >= 0
+        self.watermark_blocks = watermark_blocks
+        self.restore_cooldown = restore_cooldown
+
+    def pick_victim(
+        self, candidates: List[Request], now: int
+    ) -> Optional[Request]:
+        """LRU victim among ``candidates`` (running, not the requester,
+        not mid-prefill — the engine pre-filters)."""
+        if not candidates:
+            return None
+        shielded = lambda r: now - r.restore_iter < self.restore_cooldown  # noqa: E731
+        pool = [r for r in candidates if not shielded(r)] or candidates
+        return min(pool, key=lambda r: (r.last_sched, r.rid))
+
+    def may_restore(
+        self, req: Request, free_blocks: int, need_blocks: int, now: int
+    ) -> bool:
+        """Gate the restore lane: cooldown since the request's own
+        preemption + full worst-case need + watermark of headroom."""
+        if now - req.preempt_iter < self.restore_cooldown:
+            return False
+        return free_blocks - need_blocks >= self.watermark_blocks
+
+    def may_admit(self, free_blocks: int, need_blocks: int) -> bool:
+        """Gate fresh admission on the prompt's block need + watermark.
+        Fresh traffic never preempts running work — it waits; only the
+        *growth* of already-admitted requests may preempt."""
+        return free_blocks - need_blocks >= self.watermark_blocks
 
 
 def default_policy(mode: Mode) -> SchedulePolicy:

@@ -276,6 +276,7 @@ class StatePool:
         self._inflight: Dict[int, int] = {}
         self.peak_depth = 0
         self.peak_extent = 0
+        self.num_preempts = 0  # slots whose buffers went stale to eviction
 
     # -- host accounting ------------------------------------------------
 
@@ -297,6 +298,20 @@ class StatePool:
 
     def note_release(self, slot: int) -> None:
         self._inflight.pop(slot, None)
+
+    def note_preempt(self, slot: int) -> None:
+        """Preemption (paged-KV lane): the slot's in-flight accounting
+        drops — its verdicts were flushed at eviction.  The slot itself
+        SURVIVES preemption (recurrent rows are O(1); the memory being
+        reclaimed is KV blocks), but its device buffers here (anchor +
+        ring) go stale the moment the engine wipes the slot's live state
+        for the restore replay: nothing is copied out, because the replay
+        rebuilds the anchor exactly — ``set_commit_point`` at replay end
+        is the state after ``committed[:-1]``, which is bitwise the
+        anchor an un-preempted run would hold (the replay feeds only
+        committed tokens through the same fixed schedule)."""
+        self._inflight.pop(slot, None)
+        self.num_preempts += 1
 
     def depth_of(self, slot: int) -> int:
         return self._inflight.get(slot, 0)

@@ -40,10 +40,10 @@ case explicitly via ``latency_schedule``).
 
 Two clock modes:
 
-* **logical** (``cost_fn is None``) — the deprecated compatibility shim:
-  every iteration advances the main clock by exactly 1.0 and a verify
-  launch is ready ``latency`` ticks later, reproducing the old integer
-  ``verify_latency`` semantics bit for bit.
+* **logical** (``cost_fn is None``) — the engine's default clock: every
+  iteration advances the main clock by exactly 1.0 and a verify launch
+  is ready ``latency`` ticks later (the engine passes 1 — a verdict
+  lands the iteration after its launch).
 * **costed** (``cost_fn`` given) — clocks advance by modeled device
   seconds (``serving.costmodel.step_time``); verify passes have real
   durations, queue on their stream, and land ``latency`` *seconds* after

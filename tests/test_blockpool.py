@@ -1,0 +1,221 @@
+"""Paged-KV unit tests: block allocator, layout classification, device
+gather/scatter through block tables, block wipe semantics, and the
+commit-aware radix prefix cache (match / insert / leaf-first LRU
+eviction)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import blockpool
+from repro.serving.blockpool import BlockAllocator
+from repro.serving.prefixcache import PrefixCache
+
+
+# ----------------------------------------------------------------------
+# allocator
+# ----------------------------------------------------------------------
+
+
+class TestBlockAllocator:
+    def test_alloc_free_roundtrip(self):
+        a = BlockAllocator(4)
+        bids = [a.alloc() for _ in range(4)]
+        assert sorted(bids) == [0, 1, 2, 3]
+        assert a.alloc() is None and a.num_free() == 0
+        for b in bids:
+            assert a.decref(b) == 0
+            a.release(b)
+        assert a.num_free() == 4
+
+    def test_refcount_shares(self):
+        a = BlockAllocator(2)
+        b = a.alloc()
+        a.incref(b)  # second request maps the same block
+        assert a.decref(b) == 1  # first releases: still referenced
+        assert a.decref(b) == 0
+        with pytest.raises(AssertionError):
+            a.decref(b)  # double free
+
+    def test_cached_blocks_are_not_free_but_evictable(self):
+        a = BlockAllocator(2)
+        b = a.alloc()
+        a.cached.add(b)
+        a.decref(b)
+        assert a.num_free() == 1  # the OTHER block
+        assert a.num_evictable() == 1
+        assert a.available() == 2
+
+    def test_peak_accounting(self):
+        a = BlockAllocator(8)
+        got = [a.alloc() for _ in range(5)]
+        for b in got[:3]:
+            a.decref(b)
+            a.release(b)
+        assert a.peak_in_use == 5
+        assert a.in_use() == 2
+
+
+# ----------------------------------------------------------------------
+# layout classification + device ops
+# ----------------------------------------------------------------------
+
+
+class TestLayout:
+    def test_full_attention_is_paged(self):
+        cfg = get_smoke_config("llama3-8b")
+        lay = blockpool.build_layout(cfg, 128, 16, 32)
+        kinds = {d.kind for d in jax.tree_util.tree_leaves(lay.axes)}
+        assert kinds == {"paged"}  # pure full attention: everything paged
+        assert lay.has_paged and lay.blocks_per_table == 8
+        assert lay.null_bid == 32 and lay.scratch_bid == 33
+
+    def test_recurrent_leaves_stay_slot(self):
+        cfg = get_smoke_config("rwkv6-3b")
+        lay = blockpool.build_layout(cfg, 128, 16, 32)
+        kinds = {d.kind for d in jax.tree_util.tree_leaves(lay.axes)}
+        assert kinds == {"slot"}  # O(1) state: nothing to page
+        assert not lay.has_paged
+
+    def test_hybrid_splits_by_leaf(self):
+        cfg = get_smoke_config("jamba-1.5-large-398b")
+        lay = blockpool.build_layout(cfg, 128, 16, 32)
+        kinds = {d.kind for d in jax.tree_util.tree_leaves(lay.axes)}
+        assert kinds == {"slot", "paged"}  # attn KV paged, mamba state slot
+
+    def test_sliding_rings_stay_slot(self):
+        cfg = dataclasses.replace(
+            get_smoke_config("phi3-mini-3.8b"), attn_kind="sliding", window=8
+        )
+        lay = blockpool.build_layout(cfg, 10_000, 16, 32)
+        kinds = {d.kind for d in jax.tree_util.tree_leaves(lay.axes)}
+        assert kinds == {"slot"}  # bounded ring buffers: paging buys nothing
+
+    def test_gather_scatter_roundtrip_and_null_isolation(self):
+        cfg = get_smoke_config("llama3-8b")
+        lay = blockpool.build_layout(cfg, 64, 16, 8)
+        pool = blockpool.init_cache(cfg, lay, num_slots=2)
+        slots = jnp.array([0], jnp.int32)
+        tables = jnp.array([[3, 5, -1, -1]], jnp.int32)
+        view = blockpool.gather(pool, lay, slots, tables)
+        # a pos leaf view: allocated region gathers the (wiped) blocks,
+        # the -1 tail gathers the frozen null block — everything masked
+        pos_leaves = [
+            leaf for leaf, d in zip(
+                jax.tree_util.tree_leaves(view),
+                jax.tree_util.tree_leaves(lay.axes),
+            ) if d.kind == "paged" and leaf.dtype == jnp.int32
+        ]
+        assert pos_leaves and all(bool((p == -1).all()) for p in pos_leaves)
+        # writes into the view land in the right blocks; pad-region writes
+        # are absorbed by the scratch block, never the null block
+        view2 = jax.tree_util.tree_map(
+            lambda a: a.at[...].set(7) if a.dtype == jnp.int32 else a, view
+        )
+        pool2 = blockpool.scatter(pool, lay, slots, tables, view2)
+
+        def check(leaf, desc):
+            if desc.kind != "paged" or leaf.dtype != jnp.int32:
+                return
+            ax = desc.axis
+            take = lambda b: jnp.take(leaf, jnp.array([b]), axis=ax)  # noqa: E731
+            assert bool((take(3) == 7).all()) and bool((take(5) == 7).all())
+            assert bool((take(lay.null_bid) == -1).all()), "null block written!"
+            assert bool((take(lay.scratch_bid) == 7).all())  # absorbed pads
+            assert bool((take(0) == -1).all())  # unrelated block untouched
+
+        jax.tree_util.tree_map(check, pool2, lay.axes)
+
+    def test_wipe_blocks_resets_pos_only(self):
+        cfg = get_smoke_config("llama3-8b")
+        lay = blockpool.build_layout(cfg, 64, 16, 8)
+        pool = blockpool.init_cache(cfg, lay, num_slots=1)
+        slots = jnp.array([0], jnp.int32)
+        tables = jnp.array([[2, -1, -1, -1]], jnp.int32)
+        view = blockpool.gather(pool, lay, slots, tables)
+        view = jax.tree_util.tree_map(
+            lambda a: a.at[...].set(9) if a.dtype == jnp.int32 else a, view
+        )
+        pool = blockpool.scatter(pool, lay, slots, tables, view)
+        pool = blockpool.wipe_blocks(pool, lay, [2])
+
+        def check(leaf, desc):
+            if desc.kind == "paged" and leaf.dtype == jnp.int32:
+                sub = jnp.take(leaf, jnp.array([2]), axis=desc.axis)
+                assert bool((sub == -1).all())
+
+        jax.tree_util.tree_map(check, pool, lay.axes)
+
+
+# ----------------------------------------------------------------------
+# radix prefix cache
+# ----------------------------------------------------------------------
+
+
+def _toks(n, off=0):
+    return [(off + i) % 97 for i in range(n)]
+
+
+class TestPrefixCache:
+    def test_match_whole_blocks_only(self):
+        a = BlockAllocator(8)
+        c = PrefixCache(block_size=4)
+        bids = [a.alloc() for _ in range(3)]
+        c.insert(_toks(12), bids, now=1, allocator=a)
+        assert c.match(_toks(12), now=2) == bids
+        assert c.match(_toks(10), now=2) == bids[:2]  # partial tail block
+        assert c.match(_toks(3), now=2) == []  # shorter than one block
+        assert c.match(_toks(12, off=1), now=2) == []  # different stream
+
+    def test_insert_is_idempotent_and_keeps_first_owner(self):
+        a = BlockAllocator(8)
+        c = PrefixCache(block_size=4)
+        first = [a.alloc() for _ in range(2)]
+        c.insert(_toks(8), first, now=1, allocator=a)
+        dup = [a.alloc() for _ in range(2)]
+        adopted = c.insert(_toks(8), dup, now=2, allocator=a)
+        assert adopted == 0  # the duplicate stays request-owned
+        assert c.match(_toks(8), now=3) == first
+        assert set(first) <= a.cached and not (set(dup) & a.cached)
+
+    def test_eviction_is_leaf_first_lru(self):
+        a = BlockAllocator(8)
+        c = PrefixCache(block_size=4)
+        bids = [a.alloc() for _ in range(3)]
+        c.insert(_toks(12), bids, now=1, allocator=a)
+        for b in bids:
+            a.decref(b)  # owner retired: zero-ref, cache-resident
+        # deepest (least-recently *inserted*) leaf goes first, and an
+        # interior node is never evicted before its children
+        assert c.evict_lru(a) == bids[2]
+        assert c.evict_lru(a) == bids[1]
+        assert c.evict_lru(a) == bids[0]
+        assert c.evict_lru(a) is None
+        assert c.size == 0 and c.evictions == 3
+
+    def test_eviction_skips_referenced_blocks(self):
+        a = BlockAllocator(8)
+        c = PrefixCache(block_size=4)
+        bids = [a.alloc() for _ in range(2)]
+        c.insert(_toks(8), bids, now=1, allocator=a)
+        a.decref(bids[0])
+        a.decref(bids[1])
+        a.incref(bids[1])  # a running request maps the deep block
+        assert c.evict_lru(a) is None  # leaf busy, parent not a leaf
+        a.decref(bids[1])
+        assert c.evict_lru(a) == bids[1]
+
+    def test_lru_order_follows_use(self):
+        a = BlockAllocator(8)
+        c = PrefixCache(block_size=2)
+        x = [a.alloc()]
+        y = [a.alloc()]
+        c.insert([1, 2], x, now=1, allocator=a)
+        c.insert([3, 4], y, now=2, allocator=a)
+        c.match([1, 2], now=5)  # bump x
+        a.decref(x[0])
+        a.decref(y[0])
+        assert c.evict_lru(a) == y[0]  # y is now least recently used

@@ -1,0 +1,412 @@
+"""Paged KV memory subsystem — engine integration tests.
+
+The determinism contract under memory management: committed streams of
+deterministic requests are bitwise identical with the prefix cache on vs
+off, across block sizes, and under adversarial preemption / restore
+schedules — on every scheduler and spec depth, for attention and
+recurrent/hybrid archs.  Plus the block-accounting admission guard and the
+preemption lane's liveness under genuine pool pressure.
+"""
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core.determinism import Mode, ReductionPolicy
+from repro.models import init_params
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams, State
+from repro.serving.scheduler import (
+    AdaptivePolicy,
+    BlockMemoryPolicy,
+    OverlapPolicy,
+    PauseDecodePolicy,
+)
+
+#: aggressive drift so rollbacks actually happen at toy scale
+DRIFTY = ReductionPolicy(
+    thresholds=((2, 16), (4, 8), (16, 4)), combine_dtype="bfloat16"
+)
+
+_MODELS = {}
+
+
+def _model(arch="llama3-8b"):
+    if arch not in _MODELS:
+        cfg = get_smoke_config(arch)
+        _MODELS[arch] = (cfg, init_params(cfg, jax.random.key(0)))
+    return _MODELS[arch]
+
+
+SYS_LEN = 40  # shared system prompt (2.5 blocks at the default size)
+
+
+def _reqs(cfg, rids, det, max_new=12, shared_sys=False):
+    sys_prompt = [(3 * j + 1) % cfg.vocab_size for j in range(SYS_LEN)]
+    out = []
+    for i in rids:
+        tail = [(5 * i + j) % cfg.vocab_size for j in range(9)]
+        out.append(Request(
+            rid=i, prompt=(sys_prompt + tail[:5]) if shared_sys else tail,
+            sampling=SamplingParams(
+                max_new_tokens=max_new, is_deterministic=(i in det),
+                seed=70 + i,
+            ),
+        ))
+    return out
+
+
+def _run(cfg, params, requests, *, preempt_at=(), preempt_rid=0, window=5,
+         group=2, scheduler=None, **kw):
+    eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=window,
+                 group=group, max_batch=8, capacity=128,
+                 scheduler=scheduler, **kw)
+    for r in requests:
+        eng.submit(r)
+    it = 0
+    while eng.step():
+        it += 1
+        if it in preempt_at:
+            for r in list(eng.running):
+                if r.rid == preempt_rid and r.state is not State.PREFILLING:
+                    eng.preempt(r)
+                    break
+        assert it < 5000, "engine did not drain"
+    return {r.rid: r for r in eng.finished}, eng
+
+
+def _det_streams(done, det):
+    return {rid: done[rid].committed for rid in det}
+
+
+# ----------------------------------------------------------------------
+# prefix cache: sharing is commit-aware and bitwise-invisible
+# ----------------------------------------------------------------------
+
+
+class TestPrefixCacheDeterminism:
+    def _staggered(self, cfg, params, prefix_cache, block_size=16):
+        eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
+                     group=2, max_batch=4, capacity=128,
+                     prefix_cache=prefix_cache, block_size=block_size,
+                     prefill_chunk=8)
+        det = {0, 2}
+        reqs = _reqs(cfg, [0, 1, 2, 3], det, shared_sys=True)
+        eng.submit(reqs[0])
+        it, submitted = 0, 1
+        while True:
+            alive = eng.step()
+            it += 1
+            if it in (8, 16, 24) and submitted < 4:
+                eng.submit(reqs[submitted])
+                submitted += 1
+            if not alive and submitted >= 4:
+                break
+            assert it < 5000
+        return _det_streams({r.rid: r for r in eng.finished}, det), eng
+
+    def test_cache_on_off_bitwise_identical_and_hits(self):
+        cfg, params = _model()
+        base, _ = self._staggered(cfg, params, False)
+        got, eng = self._staggered(cfg, params, True)
+        assert got == base
+        # late arrivals really shared the system prompt's blocks
+        assert eng.prefix_cache.hits >= 2
+        assert eng.prefix_cache.hit_tokens >= 2 * 32
+
+    @pytest.mark.parametrize("block_size", [8, 64])
+    def test_block_sizes_bitwise_identical(self, block_size):
+        cfg, params = _model()
+        base, _ = self._staggered(cfg, params, False)
+        got, eng = self._staggered(cfg, params, True, block_size=block_size)
+        assert got == base, block_size
+
+    def test_cache_hit_skips_prefill_work(self):
+        cfg, params = _model()
+        _, eng = self._staggered(cfg, params, True)
+        hits = [e for e in eng.events if e.get("kind") == "cache_hit"]
+        assert hits and all(e["tokens"] >= 32 for e in hits)
+        # hit requests chunk-prefill only the tail: their first chunk
+        # event starts past the cached prefix
+        hit_rids = {e["rid"] for e in hits}
+        from repro.serving.costmodel import flatten_events
+        for rid in hit_rids:
+            chunks = [e for e in flatten_events(eng.events)
+                      if e.get("kind") == "prefill_chunk"
+                      and e.get("rid") == rid]
+            assert chunks and min(c["start"] for c in chunks) >= 32
+
+    def test_nondet_output_is_never_cached(self):
+        """Commit-aware rule: generated tokens enter the radix tree only
+        when their KV is deterministic — a NONDET-mode engine may cache
+        prompts (fixed-schedule prefill) but never fast-path output."""
+        cfg, params = _model()
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=4,
+                     capacity=128, prefill_chunk=8)
+        for r in _reqs(cfg, [0, 1], set(), shared_sys=True):
+            eng.submit(r)
+        eng.run()
+        bs = eng.pool.block_size
+        max_prompt_blocks = (SYS_LEN + 5) // bs
+        # every cached chain is a prompt prefix: no node deeper than the
+        # prompt's whole-block count
+        assert eng.prefix_cache.size <= 2 * max_prompt_blocks
+
+        def depth(node, d=0):
+            return max([d] + [depth(c, d + 1)
+                              for c in node.children.values()])
+
+        assert depth(eng.prefix_cache.root) <= max_prompt_blocks
+
+    def test_det_output_extends_the_cache_at_retirement(self):
+        cfg, params = _model()
+        done, eng = _run(cfg, params, _reqs(cfg, [0], {0}, max_new=30),
+                         scheduler=OverlapPolicy(), prefix_cache=True,
+                         block_size=8)
+        r = done[0]
+        # prompt (9) + committed[:-1] (29) = 38 tokens -> 4 full 8-blocks,
+        # deeper than the 1-block prompt prefix alone
+        assert eng.prefix_cache.size > r.prompt_len // 8
+
+
+# ----------------------------------------------------------------------
+# admission guard: block accounting
+# ----------------------------------------------------------------------
+
+
+class TestBlockCapacityGuard:
+    def test_pool_block_supply_bounds_admission(self):
+        """ISSUE 5 satellite: the submit guard derives from block-pool
+        accounting.  A pool of 4 x 16-token blocks holds 64 positions:
+        prompt 21 + max_new 43 (need 64 = 4 blocks) fits exactly; one more
+        token needs a 5th block and is rejected — even though the
+        per-request capacity (128) would allow it."""
+        cfg, params = _model()
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=2,
+                     capacity=128, num_blocks=4)
+        eng.submit(Request(rid=0, prompt=[1] * 21,
+                           sampling=SamplingParams(max_new_tokens=43)))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(Request(rid=1, prompt=[1] * 21,
+                               sampling=SamplingParams(max_new_tokens=44)))
+
+    def test_det_requests_reserve_verify_rows_in_blocks(self):
+        """The spec_depth x (W-1) + 1 verify-row reservation rides the
+        block accounting: depth 3, W 8 => 22 extra rows."""
+        cfg, params = _model()
+        eng = Engine(cfg, params, mode=Mode.LLM42, window=8, max_batch=2,
+                     capacity=128, spec_depth=3, num_blocks=4)
+        # 21 + 21 + 22 = 64 == 4 blocks exactly
+        eng.submit(Request(rid=0, prompt=[1] * 21, sampling=SamplingParams(
+            max_new_tokens=21, is_deterministic=True)))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(Request(rid=1, prompt=[1] * 21,
+                               sampling=SamplingParams(
+                                   max_new_tokens=22, is_deterministic=True)))
+
+    def test_queued_requests_wait_for_free_blocks(self):
+        """Transient pressure queues instead of rejecting: both requests
+        fit the pool alone but not together; the engine serializes them
+        through free-block admission and both finish."""
+        cfg, params = _model()
+        eng = Engine(cfg, params, mode=Mode.NONDET, max_batch=4,
+                     capacity=128, num_blocks=5)
+        for i in range(2):
+            eng.submit(Request(rid=i, prompt=[1 + i] * 30,
+                               sampling=SamplingParams(max_new_tokens=30)))
+        done = eng.run()
+        assert len(done) == 2
+        assert all(len(r.committed) == 30 for r in done)
+
+
+# ----------------------------------------------------------------------
+# preemption / restore
+# ----------------------------------------------------------------------
+
+
+SCHEDULERS = {
+    "pause": PauseDecodePolicy,
+    "overlap": OverlapPolicy,
+    "adaptive": AdaptivePolicy,
+}
+
+
+class TestPreemptionDeterminism:
+    def test_all_schedulers_and_depths_bitwise_identical(self):
+        """Acceptance criterion: forced preemption/restore schedules on
+        all schedulers and spec depths {1, 4} never move a committed
+        token."""
+        cfg, params = _model()
+        det = {0, 2}
+        reqs = lambda: _reqs(cfg, [0, 1, 2, 3], det)  # noqa: E731
+        base, _ = _run(cfg, params, reqs(), scheduler=PauseDecodePolicy())
+        base = _det_streams(base, det)
+        for name, mk in SCHEDULERS.items():
+            for depth in (1, 4):
+                done, eng = _run(cfg, params, reqs(), scheduler=mk(),
+                                 spec_depth=depth, preempt_at=(5, 11))
+                assert _det_streams(done, det) == base, (name, depth)
+                assert eng.num_preemptions >= 1, (name, depth)
+                assert eng.num_restores >= 1, (name, depth)
+
+    @pytest.mark.parametrize("arch", ["rwkv6-3b", "jamba-1.5-large-398b"])
+    def test_recurrent_archs_restore_bitwise(self, arch):
+        """Eviction/restore replays committed tokens through the chunked
+        prefill lane — the replay starts from a pristine state row, so
+        ssm/hybrid state is rebuilt bitwise (the live state at preemption
+        is post-speculation and must NOT leak into the replay)."""
+        cfg, params = _model(arch)
+        det = {0, 2}
+        reqs = lambda: _reqs(cfg, [0, 1, 2, 3], det)  # noqa: E731
+        base, _ = _run(cfg, params, reqs(), scheduler=PauseDecodePolicy())
+        base = _det_streams(base, det)
+        for depth, pre in ((1, (6,)), (4, (5, 12))):
+            done, eng = _run(cfg, params, reqs(), scheduler=OverlapPolicy(),
+                             spec_depth=depth, preempt_at=pre)
+            assert _det_streams(done, det) == base, (arch, depth)
+            assert eng.num_restores >= 1
+
+    def test_memory_pressure_preempts_and_drains(self):
+        """An undersized pool triggers REAL (policy-driven) preemption:
+        the run still drains, streams match, victims restore."""
+        cfg, params = _model()
+        det = {0, 2}
+        base, _ = _run(cfg, params,
+                       _reqs(cfg, [0, 1, 2, 3], det, shared_sys=True),
+                       scheduler=PauseDecodePolicy())
+        base = _det_streams(base, det)
+        done, eng = _run(
+            cfg, params, _reqs(cfg, [0, 1, 2, 3], det, shared_sys=True),
+            scheduler=OverlapPolicy(), num_blocks=14, prefill_chunk=8,
+            mem_policy=BlockMemoryPolicy(restore_cooldown=2),
+        )
+        assert _det_streams(done, det) == base
+        assert eng.num_preemptions >= 1 and eng.num_restores >= 1
+
+    def test_preempted_request_keeps_slot_and_stats(self):
+        cfg, params = _model()
+        done, eng = _run(cfg, params, _reqs(cfg, [0, 1], {0}),
+                         scheduler=OverlapPolicy(), preempt_at=(5,))
+        r = done[0]
+        assert r.num_preemptions == 1
+        assert r.finished() and len(r.committed) == 12
+        assert eng.restored_tokens > 0
+
+    def test_preempting_a_finished_flush_retires(self):
+        """A victim whose flushed verdicts complete its budget retires on
+        the spot instead of entering the restore lane."""
+        cfg, params = _model()
+        done, eng = _run(cfg, params, _reqs(cfg, [0, 1], {0}, max_new=4),
+                         scheduler=OverlapPolicy(), preempt_at=(4, 5, 6, 7))
+        assert done[0].finished()
+        assert not eng.preempted
+
+    _base = {}
+
+    @settings(max_examples=5, deadline=None)
+    @given(
+        pre1=st.integers(4, 9), pre2=st.integers(10, 16),
+        rid=st.integers(0, 3), block_size=st.sampled_from([8, 16, 64]),
+        cache=st.booleans(),
+        latency=st.lists(st.integers(1, 7), min_size=2, max_size=6),
+    )
+    def test_adversarial_eviction_and_landing_schedules(
+            self, pre1, pre2, rid, block_size, cache, latency):
+        """Hypothesis sweep (ISSUE 5 satellite): random eviction/restore
+        schedules combined with adversarial verdict-landing schedules,
+        across block sizes and cache on/off — committed streams must stay
+        bitwise identical to a no-preemption run.  (Falls back to the
+        deterministic stub sweep without hypothesis.)"""
+        cfg, params = _model()
+        det = {0, 2}
+        if "b" not in self._base:
+            done, _ = _run(cfg, params,
+                           _reqs(cfg, [0, 1, 2, 3], det, shared_sys=True),
+                           scheduler=PauseDecodePolicy())
+            self._base["b"] = _det_streams(done, det)
+        eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
+                     group=2, max_batch=8, capacity=128,
+                     scheduler=OverlapPolicy(), spec_depth=2,
+                     block_size=block_size, prefix_cache=cache,
+                     prefill_chunk=8,
+                     mem_policy=BlockMemoryPolicy(restore_cooldown=3))
+        eng.runtime.latency_schedule = [float(x) for x in latency]
+        for r in _reqs(cfg, [0, 1, 2, 3], det, shared_sys=True):
+            eng.submit(r)
+        it = 0
+        while eng.step():
+            it += 1
+            if it in (pre1, pre2):
+                for r in list(eng.running):
+                    if r.rid == rid and r.state is not State.PREFILLING:
+                        eng.preempt(r)
+                        break
+            assert it < 5000
+        done = {r.rid: r for r in eng.finished}
+        assert _det_streams(done, det) == self._base["b"], (
+            pre1, pre2, rid, block_size, cache, latency
+        )
+
+
+class TestOnlineRunnerDrainsPreempted:
+    def test_run_online_waits_for_the_restore_lane(self):
+        """Regression (review): run_online's drain check must include
+        engine.preempted — a victim preempted just before the rest of the
+        workload finishes (inside the restore cooldown) used to be
+        silently dropped from the results with a truncated stream."""
+        from repro.serving.online import run_online
+        cfg, params = _model()
+        eng = Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
+                     group=2, max_batch=4, capacity=128,
+                     mem_policy=BlockMemoryPolicy(restore_cooldown=8))
+        reqs = _reqs(cfg, [0, 1], {0}, max_new=30)
+        orig_step = eng.step
+
+        def step_and_preempt():
+            alive = orig_step()
+            r1 = next((r for r in eng.running if r.rid == 1), None)
+            if r1 is not None and len(r1.committed) >= 25:
+                # victim 0 evicted while 1 is about to finish
+                r0 = next((r for r in eng.running if r.rid == 0), None)
+                if r0 is not None and r0.state is not State.PREFILLING:
+                    eng.preempt(r0)
+            return alive
+
+        eng.step = step_and_preempt
+        res = run_online(eng, cfg, [(r, 0.0) for r in reqs])
+        assert not eng.preempted
+        assert sorted(res.latencies) == [0, 1]
+        done = {r.rid: r for r in eng.finished}
+        assert len(done[0].committed) == 30
+
+
+class TestMemoryPolicy:
+    def test_lru_victim_choice_is_deterministic(self):
+        pol = BlockMemoryPolicy(restore_cooldown=4)
+        a = Request(rid=1, prompt=[1])
+        b = Request(rid=2, prompt=[1])
+        a.last_sched, b.last_sched = 3, 5
+        assert pol.pick_victim([a, b], now=10) is a
+        a.last_sched = 5
+        assert pol.pick_victim([b, a], now=10) is a  # tie -> lowest rid
+
+    def test_restore_shield_is_advisory(self):
+        pol = BlockMemoryPolicy(restore_cooldown=4)
+        fresh = Request(rid=1, prompt=[1])
+        fresh.restore_iter = 9
+        old = Request(rid=2, prompt=[1])
+        old.last_sched = 99
+        # the freshly restored request is passed over while another
+        # candidate exists...
+        assert pol.pick_victim([fresh, old], now=10) is old
+        # ...but forward progress beats the shield when it is alone
+        assert pol.pick_victim([fresh], now=10) is fresh
+
+    def test_restore_hysteresis_gates_readmission(self):
+        pol = BlockMemoryPolicy(watermark_blocks=2, restore_cooldown=4)
+        r = Request(rid=1, prompt=[1])
+        r.preempt_iter = 10
+        assert not pol.may_restore(r, free_blocks=99, need_blocks=1, now=12)
+        assert pol.may_restore(r, free_blocks=99, need_blocks=1, now=14)
+        assert not pol.may_restore(r, free_blocks=2, need_blocks=1, now=14)

@@ -316,18 +316,15 @@ class TestCrossPolicyDeterminism:
                           verify_latency_ms=latency_ms)
             assert got[0].committed == base[0].committed, latency_ms
 
-    def test_integer_verify_latency_shim_is_deprecated(self, model):
-        """The logical integer shim still works bit-for-bit but warns:
-        new users belong on verify_latency_ms."""
+    def test_integer_verify_latency_shim_is_removed(self, model):
+        """ISSUE 5 satellite: the integer ``verify_latency`` shim
+        (deprecated since the multi-window PR) is gone — the continuous
+        ``verify_latency_ms`` clock is the only latency knob."""
         cfg, params = model
-        det = {0}
-        base, _ = _run(cfg, params, _reqs(cfg, [0, 1], det),
-                       scheduler=PauseDecodePolicy())
-        with pytest.warns(DeprecationWarning, match="verify_latency_ms"):
-            got, eng = _run(cfg, params, _reqs(cfg, [0, 1], det),
-                            scheduler=OverlapPolicy(), verify_latency=2)
-        assert eng.verify_latency == 2  # shim still honored
-        assert got[0].committed == base[0].committed
+        with pytest.raises(TypeError, match="verify_latency"):
+            Engine(cfg, params, mode=Mode.LLM42, verify_latency=2)
+        eng = Engine(cfg, params, mode=Mode.LLM42)
+        assert not hasattr(eng, "verify_latency")
 
     def test_spec_depth_sweep_agrees_bitwise(self, model):
         """Acceptance criterion: committed streams bitwise identical
@@ -450,7 +447,7 @@ class TestVerdictOrdering:
                          scheduler=OverlapPolicy())
         r = done[0]
         last_ev_iter = max(e["iter"] for e in eng.events)
-        # the verdict lands (verify_latency=1) the iteration after the last
+        # the verdict lands (one logical tick) the iteration after the last
         # device pass and the request retires in that same iteration
         assert r.finish_time == last_ev_iter + 1
         assert eng._now == last_ev_iter + 1  # no dead drain iterations
