@@ -1,0 +1,95 @@
+"""Persist benchmark headline numbers as ``BENCH_*.json`` at the repo root.
+
+Runs the three paper-core benchmarks in ``--smoke --json`` mode and leaves
+their row payloads (the format ``common.emit`` writes) at the repo root,
+where they are *committed*: the perf trajectory then lives in git history
+next to the code that produced it, and CI uploads the regenerated files as
+artifacts for side-by-side comparison.
+
+    python benchmarks/persist.py            # writes BENCH_{overlap,pipeline,cache}.json
+    python benchmarks/persist.py --check    # regenerate to temp, diff row keys only
+
+``--check`` verifies the committed files are structurally current (same
+benchmark names and row schema) without failing on timing jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+BENCHES = {
+    "overlap": "benchmarks/fig_overlap.py",
+    "pipeline": "benchmarks/fig_pipeline.py",
+    "cache": "benchmarks/fig_cache.py",
+}
+
+
+def run_bench(script: str, out_path: Path) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    subprocess.run(
+        [sys.executable, str(REPO / script), "--smoke", "--json", str(out_path)],
+        check=True,
+        env=env,
+        cwd=REPO,
+    )
+
+
+def _schema(path: Path) -> dict:
+    rows = json.loads(path.read_text())
+    return {
+        "n_rows": len(rows),
+        "columns": sorted(rows[0]) if rows else [],
+        "names": sorted({str(r.get("name", r.get("mode", "?"))) for r in rows}),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="regenerate to temp and compare row schema against committed files",
+    )
+    ap.add_argument(
+        "--only", choices=sorted(BENCHES), nargs="+", default=None,
+        help="subset of benchmarks to run",
+    )
+    args = ap.parse_args(argv)
+    names = args.only or sorted(BENCHES)
+
+    failures = []
+    for name in names:
+        committed = REPO / f"BENCH_{name}.json"
+        if args.check:
+            with tempfile.TemporaryDirectory() as td:
+                fresh = Path(td) / f"BENCH_{name}.json"
+                run_bench(BENCHES[name], fresh)
+                if not committed.exists():
+                    failures.append(f"{committed.name} missing — run persist.py")
+                    continue
+                want, got = _schema(fresh), _schema(committed)
+                if want != got:
+                    failures.append(
+                        f"{committed.name} schema drift: committed {got} "
+                        f"vs fresh {want} — rerun persist.py"
+                    )
+        else:
+            run_bench(BENCHES[name], committed)
+            print(f"[persist] wrote {committed.name}: {_schema(committed)}")
+
+    for f in failures:
+        print(f"[persist] FAIL: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Static determinism-contract checker (the trace-time analogue of the
+bitwise-identity test suite).
+
+LLM-42's correctness contract — everything that commits a token runs under
+a fixed-shape reduction schedule (paper §2.2/§4) — is a *structural*
+property of the traced computation: reduction geometry.  The dynamic tests
+prove it for the workloads they happen to run; this package proves it from
+the jaxprs themselves, so a refactor that silently re-schedules the commit
+path fails CI before any stream drifts.
+
+Four passes (run all via ``python -m repro.analysis.check``):
+
+* ``invariance``   — trace the engine's actual jitted steps (verify,
+  prefill-chunk, decode) at several batch compositions, canonicalize with
+  the batch dim abstracted, and prove the commit-path jaxprs structurally
+  identical modulo batch size, per arch class.
+* ``hazards``      — walk those jaxprs flagging nondeterminism-hazard
+  primitives on commit-feeding (live) paths: overlapping scatters,
+  batch-extent reductions, dot_general precision/accumulator drift,
+  data-dependent while loops.
+* ``taint``        — AST dataflow over ``core/`` + ``serving/`` +
+  ``models/``: no ``# det: commit-path`` function may reach a
+  schedule-carrying op with a non-``VERIFY_SCHEDULE`` schedule.
+* ``kernel_lint``  — structural checks over the Pallas kernels: grid dims
+  on reduction axes literal-derived, f32 accumulators, no shape-adaptive
+  tiling — fast-path kernels exempted via ``# det: fastpath``.
+
+Findings are suppressed only through ``allowlist.toml``, where every entry
+carries a justification string — the exemption set is itself reviewable.
+"""
+
+from repro.analysis.report import Finding, Report  # noqa: F401

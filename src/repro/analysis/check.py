@@ -1,0 +1,199 @@
+"""Determinism-contract checker CLI: ``python -m repro.analysis.check``.
+
+Runs all four passes and exits nonzero on any unexplained finding:
+
+1. invariance  — traces verify/prefill/decode at several batch sizes per
+   architecture class and proves the commit-path jaxprs batch-invariant;
+2. hazards     — lints the traced programs for nondeterminism-prone
+   primitives (overlapping scatters, batch-extent float reductions,
+   narrow dot accumulators, data-dependent while);
+3. taint       — AST dataflow proving no fast-path schedule reaches
+   commit-annotated code;
+4. kernel_lint — Pallas source rules (literal-derived reduction grids,
+   f32 accumulators, no shape-adaptive tiling or trace-time branches).
+
+Findings are suppressed only by a justified entry in ``allowlist.toml``;
+stale entries are findings themselves.  The expensive trace passes (1+2)
+are cached in ``.analysis_cache/`` keyed on a hash of ``src/repro`` — CI
+restores that directory so unchanged source re-checks in seconds.
+
+Fixture mode (``--paths f.py ...``) runs only the source passes on the
+given files, plus the hazard pass on any module exposing
+``analysis_trace() -> (closed_jaxpr, batch)`` — used by the seeded
+violation fixtures in ``tests/analysis_fixtures/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import importlib.util
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import hazards, invariance, kernel_lint, taint
+from repro.analysis.report import Finding, Report, load_allowlist
+
+CACHE_VERSION = 3  # bump to invalidate cached trace-pass results
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def src_hash(root: Path) -> str:
+    h = hashlib.sha256()
+    for p in sorted((root / "src" / "repro").rglob("*.py")):
+        h.update(str(p.relative_to(root)).encode())
+        h.update(b"\0")
+        h.update(p.read_bytes())
+        h.update(b"\0")
+    h.update(f"v{CACHE_VERSION}".encode())
+    return h.hexdigest()
+
+
+def _findings_to_json(findings: List[Finding]) -> list:
+    return [f.to_dict() for f in findings]
+
+
+def _findings_from_json(items: list) -> List[Finding]:
+    return [
+        Finding(
+            pass_name=d["pass_name"],
+            rule=d["rule"],
+            where=d["where"],
+            message=d["message"],
+            arch=d.get("arch"),
+        )
+        for d in items
+    ]
+
+
+def run_trace_passes(
+    root: Path, cache_dir: Optional[Path], *, use_cache: bool
+) -> tuple[List[Finding], dict]:
+    """Invariance + hazards, with results cached on the source hash."""
+    key = src_hash(root)
+    cache_file = (cache_dir or root / ".analysis_cache") / f"trace-{key[:16]}.json"
+    if use_cache and cache_file.exists():
+        try:
+            data = json.loads(cache_file.read_text())
+            if data.get("src_hash") == key:
+                print(f"[check] trace cache hit ({cache_file.name})")
+                return _findings_from_json(data["findings"]), data["certs"]
+        except (json.JSONDecodeError, KeyError):
+            pass  # corrupt cache: re-trace
+
+    print("[check] tracing engine steps (no cache hit; this takes a few minutes)")
+    inv_findings, certs, arch_traces = invariance.run_pass()
+    hz_findings = hazards.run_pass(arch_traces)
+    findings = inv_findings + hz_findings
+
+    if use_cache:
+        cache_file.parent.mkdir(parents=True, exist_ok=True)
+        cache_file.write_text(
+            json.dumps(
+                {
+                    "src_hash": key,
+                    "findings": _findings_to_json(findings),
+                    "certs": certs,
+                },
+                indent=1,
+            )
+        )
+    return findings, certs
+
+
+def _load_fixture_trace(path: Path):
+    spec = importlib.util.spec_from_file_location(f"_fixture_{path.stem}", path)
+    if spec is None or spec.loader is None:
+        return None
+    module = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(module)
+    fn = getattr(module, "analysis_trace", None)
+    return fn() if callable(fn) else None
+
+
+def run_fixture_mode(paths: List[Path], root: Path) -> Report:
+    report = Report(allowlist=[])
+    report.extend(taint.scan_files(paths, root, expected_roots=frozenset()))
+    report.extend(kernel_lint.run_pass(root, files=paths))
+    for p in paths:
+        if "analysis_trace" not in p.read_text():
+            continue
+        traced = _load_fixture_trace(p)
+        if traced is None:
+            continue
+        closed, batch = traced
+        from repro.analysis.jaxpr_utils import dce
+
+        report.extend(
+            hazards.scan_trace(dce(closed), batch, arch="fixture", kind=p.stem)
+        )
+    report.finish(check_stale=False)
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="LLM-42 determinism-contract static checker",
+    )
+    ap.add_argument("--json", type=Path, default=None, help="write JSON report here")
+    ap.add_argument("--no-cache", action="store_true", help="always re-trace")
+    ap.add_argument(
+        "--cache-dir", type=Path, default=None, help="trace cache directory"
+    )
+    ap.add_argument(
+        "--allowlist",
+        type=Path,
+        default=None,
+        help="allowlist TOML (default: src/repro/analysis/allowlist.toml)",
+    )
+    ap.add_argument(
+        "--skip-trace",
+        action="store_true",
+        help="source passes only (taint + kernel lint); no jaxpr tracing",
+    )
+    ap.add_argument(
+        "--paths",
+        type=Path,
+        nargs="+",
+        default=None,
+        help="fixture mode: lint only these files (taint/kernel/hazard-trace)",
+    )
+    args = ap.parse_args(argv)
+    root = repo_root()
+
+    if args.paths:
+        report = run_fixture_mode([p.resolve() for p in args.paths], root)
+    else:
+        allow_path = args.allowlist or root / "src/repro/analysis/allowlist.toml"
+        report = Report(allowlist=load_allowlist(allow_path))
+        report.extend(taint.run_pass(root))
+        report.extend(kernel_lint.run_pass(root))
+        if not args.skip_trace:
+            trace_findings, certs = run_trace_passes(
+                root, args.cache_dir, use_cache=not args.no_cache
+            )
+            report.extend(trace_findings)
+            report.certificates = certs
+            for arch, cert in sorted(certs.items()):
+                print(f"[check] invariance {arch}: {cert}")
+        # trace-pass allowlist entries look stale when tracing is skipped
+        report.finish(check_stale=not args.skip_trace)
+
+    out = report.format()
+    if out:
+        print(out)
+    print(f"[check] {'OK' if report.ok else 'FAIL'}: {len(report.findings)} finding(s)")
+    if args.json:
+        report.write_json(args.json)
+        print(f"[check] report written to {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,190 @@
+"""Hazard lint: nondeterminism-prone primitives on commit-feeding paths.
+
+Walks the (DCE'd) jaxprs the invariance prover traced and flags primitives
+that can break the f32 fixed-schedule combine contract:
+
+* ``scatter-add-overlap``      — floating-point ``scatter-add`` without
+  ``unique_indices``: duplicate indices combine in hardware-dependent
+  order.  Integer scatter-adds are exact (associative) and not flagged.
+* ``scatter-set-overlap``      — floating-point ``scatter`` (set) without
+  ``unique_indices``: with duplicates, *which* value wins is
+  implementation-defined.  The repo's cache writes are
+  unique-by-construction but untagged, so these are allowlisted with the
+  construction argument spelled out, not silently passed.
+* ``batch-extent-reduction``   — a floating-point reduction whose axis
+  extent is a multiple of the batch size: its combine tree grows with
+  co-scheduled traffic, the exact shape drift the contract forbids.
+  Integer reductions are exact at any extent and exempt.
+* ``dot-accum-dtype``          — ``dot_general`` accumulating in an
+  inexact dtype narrower than f32 (the contract's combine dtype).
+* ``dot-default-precision``    — an f32 ``dot_general`` without
+  ``Precision.HIGHEST``: on TPU, default precision may drop to bf16
+  passes whose number is backend/shape dependent (low-order drift).
+* ``data-dependent-while``     — a ``while`` on the commit path: its trip
+  count is value-dependent, so the reduction structure is not fixed by
+  shape alone.
+
+Findings are attributed to source via each equation's traceback.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_utils import eqn_source, walk_all
+from repro.analysis.report import Finding
+
+_REDUCE_PRIMS = {
+    "reduce_sum",
+    "reduce_prod",
+    "cumsum",
+    "cumprod",
+    "cumlogsumexp",
+    "reduce_precision",
+}
+# max/min/argmax select, not combine: exact under any order (ties are
+# resolved by index rules, not accumulation), so they are not flagged.
+
+
+def _is_inexact(dtype) -> bool:
+    return jnp.issubdtype(dtype, jnp.inexact)
+
+
+def _precision_is_highest(precision) -> bool:
+    if precision is None:
+        return False
+    try:
+        items = list(precision) if isinstance(precision, (tuple, list)) else [precision]
+    except TypeError:
+        items = [precision]
+    return all("HIGHEST" in str(p) for p in items)
+
+
+def scan_trace(
+    closed, batch: int, *, arch: str, kind: str
+) -> list[Finding]:
+    """Lint one traced commit-path program (already DCE'd)."""
+    findings: list[Finding] = []
+    seen: set = set()
+
+    def emit(rule: str, eqn, message: str) -> None:
+        where, line = eqn_source(eqn)
+        key = (rule, where, message)
+        if key in seen:
+            return
+        seen.add(key)
+        at = f" (line {line})" if line else ""
+        findings.append(
+            Finding(
+                pass_name="hazards",
+                rule=rule,
+                where=where,
+                arch=arch,
+                message=f"[{arch}:{kind}]{at} {message}",
+            )
+        )
+
+    def cb(eqn, path) -> None:
+        name = eqn.primitive.name
+        params = eqn.params
+        if name in ("scatter-add", "scatter-mul"):
+            out_dtype = eqn.outvars[0].aval.dtype
+            if _is_inexact(out_dtype) and not params.get("unique_indices"):
+                emit(
+                    "scatter-add-overlap",
+                    eqn,
+                    f"{name} on {out_dtype} without unique_indices: "
+                    "duplicate indices combine in hardware order, not the "
+                    "fixed f32 schedule",
+                )
+        elif name == "scatter":
+            out_dtype = eqn.outvars[0].aval.dtype
+            if _is_inexact(out_dtype) and not params.get("unique_indices"):
+                emit(
+                    "scatter-set-overlap",
+                    eqn,
+                    f"scatter-set on {out_dtype} without unique_indices: "
+                    "with duplicate indices the winning value is "
+                    "implementation-defined",
+                )
+        elif name in _REDUCE_PRIMS:
+            in_aval = eqn.invars[0].aval
+            if not _is_inexact(getattr(in_aval, "dtype", jnp.int32)):
+                return
+            axes = params.get("axes", params.get("axis"))
+            if axes is None:
+                return
+            axes = axes if isinstance(axes, Iterable) else (axes,)
+            shape = getattr(in_aval, "shape", ())
+            for ax in axes:
+                try:
+                    extent = int(shape[int(ax)])
+                except (IndexError, TypeError, ValueError):
+                    continue
+                if extent >= batch and extent % batch == 0:
+                    emit(
+                        "batch-extent-reduction",
+                        eqn,
+                        f"{name} over axis {ax} of extent {extent} = "
+                        f"{extent // batch} x batch({batch}) on "
+                        f"{in_aval.dtype}: the combine tree grows with "
+                        "co-scheduled traffic",
+                    )
+        elif name == "dot_general":
+            lhs, rhs = (v.aval for v in eqn.invars[:2])
+            out = eqn.outvars[0].aval
+            if not (_is_inexact(lhs.dtype) or _is_inexact(rhs.dtype)):
+                return  # integer dots are exact
+            acc = params.get("preferred_element_type") or out.dtype
+            if _is_inexact(acc) and jnp.finfo(acc).bits < 32:
+                emit(
+                    "dot-accum-dtype",
+                    eqn,
+                    f"dot_general accumulates in {jnp.dtype(acc).name} "
+                    f"({lhs.dtype}x{rhs.dtype} operands): the contract "
+                    "requires an f32 combine on the commit path",
+                )
+            if not _precision_is_highest(params.get("precision")):
+                emit(
+                    "dot-default-precision",
+                    eqn,
+                    f"dot_general ({lhs.dtype}x{rhs.dtype}) without "
+                    "Precision.HIGHEST: default precision may split into "
+                    "backend-dependent bf16 passes",
+                )
+        elif name == "while":
+            emit(
+                "data-dependent-while",
+                eqn,
+                "while loop on the commit path: trip count is "
+                "value-dependent, so reduction structure is not fixed by "
+                "shape alone",
+            )
+
+    walk_all(closed, cb)
+    return findings
+
+
+def run_pass(arch_traces) -> list[Finding]:
+    """Lint every commit-path trace the invariance pass produced.
+
+    Each program is scanned at its smallest traced batch; the invariance
+    pass has already proven the structure identical at the others.
+    """
+    findings: list[Finding] = []
+    merged: dict = {}
+    for tr in arch_traces:
+        for kind in ("verify", "prefill_chunk", "decode_invariant"):
+            per = tr.traces[kind]
+            b = min(per)
+            for f in scan_trace(per[b], b, arch=tr.arch, kind=kind):
+                # the same source line usually appears in several arch
+                # traces; report it once with every context listed
+                k = f.key() + (f.message.split("] ", 1)[-1],)
+                if k in merged:
+                    continue
+                merged[k] = f
+                findings.append(f)
+    return findings

@@ -15,6 +15,10 @@ are processed together as an (G x D) MXU tile.  VMEM scratch holds the
 running (m, d, o) triple for the current (b, kv) tile.
 """
 
+# det: fastpath
+# This file implements the licensed speculative fast path: its split
+# schedules are batch-adaptive BY DESIGN and the taint pass proves them
+# unreachable from the commit side.
 from __future__ import annotations
 
 import functools

@@ -14,6 +14,10 @@ schedule's split count.  MXU alignment: bm, bn multiples of 128 when the
 problem allows (ops.py pads).
 """
 
+# det: fastpath
+# This file implements the licensed speculative fast path: its split
+# schedules are batch-adaptive BY DESIGN and the taint pass proves them
+# unreachable from the commit side.
 from __future__ import annotations
 
 import functools

@@ -343,8 +343,15 @@ def moe_ffn(
     flat_e = idx.reshape(-1)  # (T*K,)
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]
-    # position of each routed token within its expert bucket
-    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    # position of each routed token within its expert bucket.  The bucket
+    # starts are exact integer counts (#{assignments < e}, i.e. the 'left'
+    # insertion index) computed by a fixed-structure reduction rather than
+    # jnp.searchsorted, which lowers to a binary-search scan whose
+    # ceil(log2(T*K)) trip count varies with the token count — a
+    # batch-variant structure on the commit path
+    starts = jnp.sum(
+        (sorted_e[None, :] < jnp.arange(E)[:, None]).astype(jnp.int32), axis=1
+    )
     pos_in_e = jnp.arange(T * K) - starts[sorted_e]
     keep = pos_in_e < C
     dest = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # overflow bucket

@@ -54,7 +54,10 @@ def mamba_layer(
     windows = jnp.stack(
         [jax.lax.slice_in_dim(ctx, i, i + W, axis=1) for i in range(dc)], axis=-1
     )  # (B, W, di, dc)
-    xc = jnp.einsum("bwic,ci->bwi", windows.astype(F32), p["conv_w"].astype(F32))
+    xc = jnp.einsum(
+        "bwic,ci->bwi", windows.astype(F32), p["conv_w"].astype(F32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
     xc = jax.nn.silu(xc + p["conv_b"].astype(F32)).astype(x.dtype)
     new_conv = jax.lax.slice_in_dim(ctx, ctx.shape[1] - (dc - 1), ctx.shape[1], axis=1)
 
@@ -75,7 +78,8 @@ def mamba_layer(
     def step(h, t):
         d_t, u_t, c_t = t
         h = d_t * h + u_t  # (B, di, ds)
-        y = jnp.einsum("bis,bs->bi", h, c_t)
+        y = jnp.einsum("bis,bs->bi", h, c_t,
+                       precision=jax.lax.Precision.HIGHEST)
         return h, (y, h if collect_states else 0.0)
 
     xs = (
@@ -92,10 +96,11 @@ def mamba_layer(
     new_state = {"conv": new_conv.astype(xi.dtype), "ssm": hT}
     per_pos = None
     if collect_states:
-        # conv state after position w = inputs [w-dc+2 .. w]; slice from ctx
-        conv_per_pos = jnp.stack(
-            [jax.lax.slice_in_dim(ctx, w + 1, w + dc, axis=1) for w in range(W)],
-            axis=1,
-        )  # (B, W, dc-1, di)
+        # conv state after position w = inputs [w-dc+2 .. w]; gathered from
+        # ctx in one vectorized lookup — a per-w Python slice loop would
+        # make the traced structure (eqn count) vary with the chunk width,
+        # breaking commit-path batch invariance
+        idx = jnp.arange(W)[:, None] + 1 + jnp.arange(dc - 1)[None, :]
+        conv_per_pos = ctx[:, idx]  # (B, W, dc-1, di)
         per_pos = {"conv": conv_per_pos.astype(xi.dtype), "ssm": jnp.moveaxis(hs, 0, 1)}
     return out, new_state, per_pos

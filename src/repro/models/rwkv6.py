@@ -72,7 +72,8 @@ def time_mix(
     def step(s, t):  # s: (B, H, hd, hd) indexed [k_dim, v_dim]
         r_t, k_t, v_t, w_t = t
         kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, hd, hd)
-        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv,
+                         precision=jax.lax.Precision.HIGHEST)
         s = w_t[..., :, None] * s + kv
         return s, (out, s if collect_states else 0.0)
 

@@ -402,6 +402,7 @@ def encode(
     return rms_norm(x, params["enc_final_norm"], cfg.norm_eps, schedule)
 
 
+# det: commit-path
 def build_cross_cache(
     params: Dict, cfg: ModelConfig, enc_embeds: jax.Array,
     enc_mask: Optional[jax.Array] = None,

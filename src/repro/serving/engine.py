@@ -249,6 +249,7 @@ class Engine:
             self._fns[key] = step
         return self._fns[key]
 
+    # det: commit-path
     def _prefill_fn(self, P: int) -> Callable:
         key = ("prefill", P)
         if key not in self._fns:
@@ -293,6 +294,7 @@ class Engine:
             self._fns[key] = step
         return self._fns[key]
 
+    # det: commit-path
     def _prefill_chunk_fn(self, C: int) -> Callable:
         """Fixed-shape C-token prefill chunk, usable by every arch
         (generalizes the old sliding-window-only chunk path).  Takes input
@@ -870,6 +872,7 @@ class Engine:
             "replay": replay,
         }
 
+    # det: commit-path
     def _prefill(self, req: Request) -> None:
         cfg = self.cfg
         P = _bucket(req.prompt_len)

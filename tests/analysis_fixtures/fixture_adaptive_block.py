@@ -1,0 +1,62 @@
+"""SEEDED VIOLATION (do not fix): batch-adaptive reduction block size.
+
+A GEMM whose K-block size is derived from the batch dimension M — the
+reduction tree's chunking changes with how many requests are co-scheduled,
+which is exactly the batch-variance the universal-schedule rule forbids.
+The checker must flag:
+  * kernel_lint/adaptive-block-size    (bk = min(...) over a shape name)
+  * kernel_lint/grid-reduction-extent  (k_steps inherits the adaptive bk)
+(The BlockSpec uses of bk are folded into the adaptive-block-size report.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    s = pl.program_id(2)
+    partial = jnp.dot(
+        x_ref[...].astype(F32), w_ref[...].astype(F32), preferred_element_type=F32
+    )
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(s > 0)
+    def _fold():
+        acc_ref[...] = acc_ref[...] + partial
+
+    @pl.when(s == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_adaptive(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    M, K = x.shape
+    _, N = w.shape
+    bm, bn = 128, 128
+    # VIOLATION: K-chunk size adapts to batch size — small batches get a
+    # finer split (more parallelism), changing the reduction tree with M.
+    bk = min(K, 4096 // M * 128)
+    k_steps = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,59 @@
+"""SEEDED VIOLATION (do not fix): bf16 accumulator in a reduction kernel.
+
+A split-accumulation GEMM whose VMEM scratch and dot accumulation are
+bfloat16.  Sub-f32 partials round between folds, so the result depends on
+the fold order — the contract requires f32 combines on the commit path.
+The checker must flag:
+  * kernel_lint/accum-dtype  (VMEM scratch is bf16)
+  * kernel_lint/accum-dtype  (preferred_element_type is bf16)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BF16 = jnp.bfloat16
+BK = 512
+BM = 128
+BN = 128
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    s = pl.program_id(2)
+    # VIOLATION: bf16 accumulation — every partial rounds to 8 mantissa bits
+    partial = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=BF16)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(s > 0)
+    def _fold():
+        acc_ref[...] = acc_ref[...] + partial
+
+    @pl.when(s == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_bf16_accum(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    M, K = x.shape
+    _, N = w.shape
+    k_steps = K // BK
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(M // BM, N // BN, k_steps),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, s: (i, s)),
+            pl.BlockSpec((BK, BN), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((BM, BN), BF16)],  # VIOLATION: bf16 scratch
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,34 @@
+"""SEEDED VIOLATION (do not fix): overlapping float scatter-add.
+
+A KV-style writeback that scatter-adds f32 rows at *data-dependent* slot
+indices with no uniqueness guarantee: duplicate slots combine in hardware
+order, not the fixed f32 schedule.  Exposes ``analysis_trace()`` so the
+checker's fixture mode (and the hazard pass in tests) can lint the traced
+jaxpr.  The checker must flag:
+  * hazards/scatter-add-overlap
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BATCH = 13
+CAPACITY = 64
+DIM = 8
+
+
+def overlapping_writeback(cache, updates, slots):
+    """cache: (CAP, D) f32; updates: (B, D) f32; slots: (B,) i32."""
+    # VIOLATION: slots are data-dependent and may collide; float adds at
+    # duplicate indices fold in implementation order
+    return cache.at[slots].add(updates)
+
+
+def analysis_trace():
+    closed = jax.make_jaxpr(overlapping_writeback)(
+        jax.ShapeDtypeStruct((CAPACITY, DIM), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH, DIM), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+    )
+    return closed, BATCH
