@@ -1,12 +1,12 @@
 """Persist benchmark headline numbers as ``BENCH_*.json`` at the repo root.
 
-Runs the three paper-core benchmarks in ``--smoke --json`` mode and leaves
+Runs the headline benchmarks in ``--smoke --json`` mode and leaves
 their row payloads (the format ``common.emit`` writes) at the repo root,
 where they are *committed*: the perf trajectory then lives in git history
 next to the code that produced it, and CI uploads the regenerated files as
 artifacts for side-by-side comparison.
 
-    python benchmarks/persist.py            # writes BENCH_{overlap,pipeline,cache}.json
+    python benchmarks/persist.py            # writes BENCH_{overlap,pipeline,cache,prefill}.json
     python benchmarks/persist.py --check    # regenerate to temp, diff row keys only
 
 ``--check`` verifies the committed files are structurally current (same
@@ -29,6 +29,7 @@ BENCHES = {
     "overlap": "benchmarks/fig_overlap.py",
     "pipeline": "benchmarks/fig_pipeline.py",
     "cache": "benchmarks/fig_cache.py",
+    "prefill": "benchmarks/fig_prefill.py",
 }
 
 

@@ -109,7 +109,9 @@ def _num_table_blocks(engine: Engine) -> int:
 def trace_verify(engine: Engine, G: int):
     """Jaxpr of the grouped verify pass at group size G."""
     cfg = engine.cfg
-    vfn = make_verify_fn(cfg, G, WINDOW, engine.pool.layout)
+    vfn = make_verify_fn(
+        cfg, G, WINDOW, engine.pool.layout, paged=engine._paged_fwd
+    )
     nblk = _num_table_blocks(engine)
     sds = jax.ShapeDtypeStruct
     W = WINDOW

@@ -19,6 +19,10 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pallas_decode_attn
 from repro.kernels.gemm_batch_invariant import gemm_batch_invariant as _pallas_bi
 from repro.kernels.gemm_splitk import gemm_splitk as _pallas_splitk
+from repro.kernels.paged_attention import (
+    paged_attention as _pallas_paged_attn,
+    paged_attention_fast as _pallas_paged_attn_fast,
+)
 from repro.kernels.rmsnorm import rmsnorm as _pallas_rmsnorm
 
 
@@ -97,6 +101,48 @@ def decode_attention(
     return _pallas_decode_attn(
         q, k, v, lengths, kv_splits=max(splits, 1),
         combine_dtype=schedule.combine_dtype, interpret=not on_tpu(),
+    )
+
+
+def paged_attention(
+    q: jax.Array,         # (B, H, D)
+    k_pool: jax.Array,    # (NB, bs, KV, D)
+    v_pool: jax.Array,    # (NB, bs, KV, D)
+    pos_pool: jax.Array,  # (NB, bs)
+    tables: jax.Array,    # (B, nblk)
+    q_pos: jax.Array,     # (B,)
+    schedule: Schedule,
+    *,
+    null_bid: int | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Paged decode/verify attention reading K/V through the block table.
+
+    ``schedule.kv_splits == 1`` selects the commit-path kernel (fixed-shape
+    single-pass softmax, lint-clean); any other split count selects the
+    ``# det: fastpath`` flash-decode variant.  Splits that do not divide the
+    table reach fall back to 1, mirroring ``decode_attention``.
+    """
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "jnp"
+    nblk = tables.shape[1]
+    splits = schedule.kv_splits if nblk % max(schedule.kv_splits, 1) == 0 else 1
+    splits = max(splits, 1)
+    if impl == "jnp":
+        return ref.paged_attention(
+            q, k_pool, v_pool, pos_pool, tables, q_pos,
+            null_bid=null_bid, kv_splits=splits,
+            combine_dtype=schedule.combine_dtype,
+        )
+    if splits == 1:
+        return _pallas_paged_attn(
+            q, k_pool, v_pool, pos_pool, tables, q_pos,
+            null_bid=null_bid, interpret=not on_tpu(),
+        )
+    return _pallas_paged_attn_fast(
+        q, k_pool, v_pool, pos_pool, tables, q_pos,
+        kv_splits=splits, combine_dtype=schedule.combine_dtype,
+        null_bid=null_bid, interpret=not on_tpu(),
     )
 
 

@@ -1,0 +1,241 @@
+"""Paged decode/verify attention: K/V read through the block table.
+
+vLLM-paged-attention-shaped: K/V live in a global pool of fixed-size blocks
+``(num_blocks + 2, block_size, KV, D)`` with no batch axis; each row owns a
+table of block indices (``-1`` = unallocated, mapped to the pool's *null
+block* whose positions are ``-1`` and therefore always masked).  The kernel
+assembles the row's view inside the launch — the host-side gather copy the
+legacy path paid per iteration never materializes.
+
+Two variants, per the determinism contract:
+
+* ``paged_attention`` — the commit-path kernel.  Grid ``(B, KV)`` carries no
+  reduction axes at all (both axes index the output tile); the block-table
+  walk is a ``fori_loop`` whose chunk size is the literal ``block_size`` and
+  whose trip count is the table reach, so the reduction tree over keys is a
+  single fixed-shape f32 softmax — exactly the universal schedule
+  ``kernels/ref.py`` defines.  It must stay clean under
+  ``repro.analysis.kernel_lint``.
+* ``paged_attention_fast`` — the licensed fast path: kv-split flash-decode
+  over the table (grid ``(B, KV, kv_splits)``), merging per-split partials
+  through f32 VMEM scratch.  Split count follows the workload, so its
+  schedule is nondeterministic by design and the function is exempted with
+  ``# det: fastpath`` (the taint pass proves it unreachable from the commit
+  side).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _gather_view(kp_ref, vp_ref, pp_ref, tab_ref, *, lo, n_blocks, block_size, d):
+    """Assemble ``n_blocks`` table blocks starting at ``lo`` into one view.
+
+    Returns f32 ``(n_blocks * block_size, d)`` K and V plus the int32
+    position vector.  The walk order and chunk size are static, so the
+    assembled view — and every reduction over it — has a fixed shape.
+    """
+    size = n_blocks * block_size
+
+    def body(j, carry):
+        kv, vv, pv = carry
+        bid = tab_ref[0, lo + j]
+        kb = pl.load(
+            kp_ref, (pl.dslice(bid, 1), slice(None), slice(None), slice(None))
+        )
+        vb = pl.load(
+            vp_ref, (pl.dslice(bid, 1), slice(None), slice(None), slice(None))
+        )
+        pb = pl.load(pp_ref, (pl.dslice(bid, 1), slice(None)))
+        off = j * block_size
+        kv = jax.lax.dynamic_update_slice(
+            kv, kb.reshape(block_size, d).astype(F32), (off, 0)
+        )
+        vv = jax.lax.dynamic_update_slice(
+            vv, vb.reshape(block_size, d).astype(F32), (off, 0)
+        )
+        pv = jax.lax.dynamic_update_slice(pv, pb.reshape(block_size), (off,))
+        return kv, vv, pv
+
+    init = (
+        jnp.zeros((size, d), F32),
+        jnp.zeros((size, d), F32),
+        jnp.full((size,), -1, jnp.int32),
+    )
+    return jax.lax.fori_loop(0, n_blocks, body, init)
+
+
+def _paged_kernel(
+    q_ref, kp_ref, vp_ref, pp_ref, tab_ref, qpos_ref, o_ref, *, blocks_per_row,
+    block_size, scale
+):
+    # q_ref (1, 1, G, D); pools (NB, bs, 1, D) / (NB, bs); tab_ref (1, nblk)
+    q = q_ref[0, 0].astype(F32) * scale  # (G, D)
+    d = q.shape[-1]
+    kv, vv, pv = _gather_view(
+        kp_ref, vp_ref, pp_ref, tab_ref,
+        lo=0, n_blocks=blocks_per_row, block_size=block_size, d=d,
+    )
+    qp = qpos_ref[0, 0]
+    s = jnp.dot(q, kv.T, preferred_element_type=F32)  # (G, S)
+    valid = (pv >= 0) & (pv <= qp)
+    s = jnp.where(valid[None, :], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    e = jnp.exp(s - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.dot(e, vv, preferred_element_type=F32) / jnp.maximum(denom, 1e-30)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("null_bid", "interpret"))
+def paged_attention(
+    q: jax.Array,  # (B, H, D)
+    k_pool: jax.Array,  # (NB, bs, KV, D)
+    v_pool: jax.Array,  # (NB, bs, KV, D)
+    pos_pool: jax.Array,  # (NB, bs) int32, -1 = empty
+    tables: jax.Array,  # (B, nblk) int32 block ids, -1 = unallocated
+    q_pos: jax.Array,  # (B,) int32 absolute query position
+    *,
+    null_bid: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Commit-path paged attention: one fixed-shape f32 softmax per row."""
+    B, H, D = q.shape
+    NB, bs, KVH, _ = k_pool.shape
+    nblk = tables.shape[1]
+    qg = q.reshape(B, KVH, H // KVH, D)
+    B, KV, G, D = qg.shape
+    sentinel = (NB - 2) if null_bid is None else null_bid
+    tab = jnp.where(tables < 0, sentinel, tables).astype(jnp.int32)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_kernel,
+            blocks_per_row=nblk,
+            block_size=bs,
+            scale=D ** -0.5,
+        ),
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((NB, bs, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((NB, bs, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((NB, bs), lambda b, h: (0, 0)),
+            pl.BlockSpec((1, nblk), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), F32),
+        interpret=interpret,
+    )(qg, k_pool, v_pool, pos_pool, tab, qp)
+    return out.reshape(B, H, D)
+
+
+# det: fastpath
+def _paged_fast_kernel(
+    q_ref, kp_ref, vp_ref, pp_ref, tab_ref, qpos_ref, o_ref, m_ref, d_ref,
+    acc_ref, *, kv_splits, blocks_per_split, block_size, scale, combine_dtype
+):
+    s_idx = pl.program_id(2)
+    q = q_ref[0, 0].astype(F32) * scale  # (G, D)
+    d = q.shape[-1]
+    kv, vv, pv = _gather_view(
+        kp_ref, vp_ref, pp_ref, tab_ref,
+        lo=s_idx * blocks_per_split, n_blocks=blocks_per_split,
+        block_size=block_size, d=d,
+    )
+    qp = qpos_ref[0, 0]
+    s = jnp.dot(q, kv.T, preferred_element_type=F32)
+    valid = (pv >= 0) & (pv <= qp)
+    s = jnp.where(valid[None, :], s, -jnp.inf)
+    m_c = jnp.maximum(jnp.max(s, axis=-1), -1e30)  # (G,)
+    e = jnp.exp(s - m_c[:, None]).astype(combine_dtype)
+    d_c = jnp.sum(e, axis=-1)  # (G,)
+    o_c = jnp.dot(e.astype(F32), vv, preferred_element_type=F32)  # (G, D)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = m_c
+        d_ref[...] = d_c.astype(F32)
+        acc_ref[...] = o_c
+
+    @pl.when(s_idx > 0)
+    def _merge():
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, m_c)
+        a_prev = jnp.exp(m_prev - m_new)
+        a_c = jnp.exp(m_c - m_new)
+        m_ref[...] = m_new
+        d_ref[...] = d_ref[...] * a_prev + d_c.astype(F32) * a_c
+        acc_ref[...] = acc_ref[...] * a_prev[:, None] + o_c * a_c[:, None]
+
+    @pl.when(s_idx == kv_splits - 1)
+    def _emit():
+        denom = jnp.maximum(d_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+# det: fastpath
+@functools.partial(
+    jax.jit, static_argnames=("kv_splits", "combine_dtype", "null_bid", "interpret")
+)
+def paged_attention_fast(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    pos_pool: jax.Array,
+    tables: jax.Array,
+    q_pos: jax.Array,
+    *,
+    kv_splits: int = 1,
+    combine_dtype: str = "float32",
+    null_bid: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fast-path paged attention: kv-split flash-decode over the table."""
+    B, H, D = q.shape
+    NB, bs, KVH, _ = k_pool.shape
+    nblk = tables.shape[1]
+    if nblk % kv_splits != 0:
+        raise ValueError(f"kv_splits={kv_splits} must divide table reach {nblk}")
+    qg = q.reshape(B, KVH, H // KVH, D)
+    B, KV, G, D = qg.shape
+    sentinel = (NB - 2) if null_bid is None else null_bid
+    tab = jnp.where(tables < 0, sentinel, tables).astype(jnp.int32)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_fast_kernel,
+            kv_splits=kv_splits,
+            blocks_per_split=nblk // kv_splits,
+            block_size=bs,
+            scale=D ** -0.5,
+            combine_dtype=jnp.dtype(combine_dtype),
+        ),
+        grid=(B, KV, kv_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((NB, bs, 1, D), lambda b, h, s: (0, 0, h, 0)),
+            pl.BlockSpec((NB, bs, 1, D), lambda b, h, s: (0, 0, h, 0)),
+            pl.BlockSpec((NB, bs), lambda b, h, s: (0, 0)),
+            pl.BlockSpec((1, nblk), lambda b, h, s: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), F32),
+        scratch_shapes=[
+            pltpu.VMEM((G,), F32),
+            pltpu.VMEM((G,), F32),
+            pltpu.VMEM((G, D), F32),
+        ],
+        interpret=interpret,
+    )(qg, k_pool, v_pool, pos_pool, tab, qp)
+    return out.reshape(B, H, D)

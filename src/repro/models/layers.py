@@ -15,7 +15,7 @@ absolute position held in each slot (-1 = empty); masking is computed from
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -270,6 +270,62 @@ def attention_cached(
         if window > 0:
             mask = mask & (kp > qp - window)
         out = _softmax_attend(q, k_cache, v_cache, mask, schedule, cfg.logit_softcap)
+    out = matmul(out.reshape(B, W, -1).astype(x.dtype), p["wo"], schedule)
+    return out, {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+
+class PagedView(NamedTuple):
+    """Static geometry of a paged KV pool, threaded into the forward pass."""
+
+    block_size: int
+    null_bid: int  # reads through -1 table entries land here (pos == -1)
+    scratch_bid: int  # writes past the table land here (never read)
+
+
+def attention_paged(
+    p: Dict,
+    cfg,
+    x: jax.Array,  # (B, W, D)
+    cache: Dict,  # {"k","v": (NB+2, bs, KV, HD), "pos": (NB+2, bs)} pool-shaped
+    tables: jax.Array,  # (B, nblk) int32 block ids, -1 = unallocated
+    start_pos: jax.Array,  # (B,) absolute position of x[:, 0]
+    schedule: Schedule,
+    paged: PagedView,
+) -> Tuple[jax.Array, Dict]:
+    """Incremental attention reading/writing K/V *through the block table*.
+
+    The pool leaves carry no batch axis; each row's view is the
+    concatenation of its table's blocks (``-1`` entries read the null block,
+    whose positions are ``-1`` and therefore always masked).  Writes for the
+    W new tokens go to ``tables[b, abs_pos // block_size]``; positions past
+    the table (padded rows / padded window tails) are absorbed by the
+    scratch block, which is never read.  Semantically — and bitwise — this
+    equals gathering the view and running :func:`attention_cached` on it;
+    the host-side gather copy is what disappears.
+    """
+    B, W, _ = x.shape
+    bs = paged.block_size
+    nblk = tables.shape[1]
+    q, k_new, v_new = _qkv(p, cfg, x, schedule)
+    abs_pos = start_pos[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    q = rope(q, abs_pos, cfg.rope_theta) * (cfg.hd**-0.5)
+    k_new = rope(k_new, abs_pos, cfg.rope_theta)
+
+    blk = abs_pos // bs  # (B, W)
+    off = abs_pos % bs
+    bid = jnp.take_along_axis(tables, jnp.clip(blk, 0, nblk - 1), axis=1)
+    bid = jnp.where((bid < 0) | (blk >= nblk), paged.scratch_bid, bid)
+    k_cache = cache["k"].at[bid, off].set(k_new.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bid, off].set(v_new.astype(cache["v"].dtype))
+    pos_cache = cache["pos"].at[bid, off].set(abs_pos)
+
+    flat = jnp.where(tables < 0, paged.null_bid, tables)  # (B, nblk)
+    k_view = k_cache[flat].reshape(B, nblk * bs, -1, cfg.hd)
+    v_view = v_cache[flat].reshape(B, nblk * bs, -1, cfg.hd)
+    kp = pos_cache[flat].reshape(B, 1, nblk * bs)  # (B, 1, S)
+    qp = abs_pos[:, :, None]  # (B, W, 1)
+    mask = (kp >= 0) & (kp <= qp)
+    out = _softmax_attend(q, k_view, v_view, mask, schedule, cfg.logit_softcap)
     out = matmul(out.reshape(B, W, -1).astype(x.dtype), p["wo"], schedule)
     return out, {"k": k_cache, "v": v_cache, "pos": pos_cache}
 

@@ -32,7 +32,9 @@ from repro.models import mamba as mamba_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models.base import ModelConfig
 from repro.models.layers import (
+    PagedView,
     attention_cached,
+    attention_paged,
     attention_train,
     cross_attention,
     encode_cross_kv,
@@ -146,6 +148,8 @@ def _apply_layer(
     schedule: Schedule,
     collect_states: bool,
     cross_kv: Optional[Dict] = None,
+    tables: Optional[jax.Array] = None,
+    paged: Optional[PagedView] = None,
 ) -> Tuple[jax.Array, Optional[Dict], Any, Dict]:
     """Apply decoder layer `layer_idx`.  Returns (x, new_cache, per_pos, aux)."""
     kind = cfg.layer_kind(layer_idx)
@@ -177,6 +181,12 @@ def _apply_layer(
     if kind == "attn":
         if lc is None:
             out = attention_train(lp["attn"], cfg, h, schedule, window)
+        elif paged is not None and window == 0:
+            # paged pool leaves carry no batch axis; sliding (window > 0)
+            # archs keep dense rings, so their leaves are never paged
+            out, new_cache = attention_paged(
+                lp["attn"], cfg, h, lc, tables, start_pos, schedule, paged
+            )
         else:
             out, new_cache = attention_cached(
                 lp["attn"], cfg, h, lc, start_pos, schedule, window
@@ -236,12 +246,19 @@ def forward(
     schedule: Schedule = VERIFY_SCHEDULE,
     collect_states: bool = False,
     unroll: bool = False,
+    tables: Optional[jax.Array] = None,  # (B, nblk) block tables (paged mode)
+    paged: Optional[PagedView] = None,
 ) -> Tuple[jax.Array, Dict, Any]:
     """Incremental forward: prefill / decode / verify.
 
     Returns (logits (B, W, V) f32, new_cache, per_pos_states).
     ``per_pos_states`` mirrors the recurrent-layer caches with an extra
     per-position axis (only when collect_states=True; else None).
+
+    When ``paged`` is given, full-attention cache leaves are pool-shaped
+    (no batch axis) and attention reads/writes through ``tables``; the
+    tables are closed over by the block scan (constant across blocks),
+    while the pool leaves ride the scanned cache tree as usual.
     """
     x = _embed(params, cfg, tokens, inputs_embeds)
     period = _period(cfg)
@@ -255,6 +272,7 @@ def forward(
             x, nc, pp, _ = _apply_layer(
                 cfg, i, params["head_layers"][str(i)], x,
                 cache["head_layers"][str(i)], start_pos, schedule, collect_states,
+                tables=tables, paged=paged,
             )
             new_cache["head_layers"][str(i)] = nc
             per_pos_head[str(i)] = pp
@@ -274,6 +292,7 @@ def forward(
             h, nc, pp, _aux = _apply_layer(
                 cfg, fkd + p, block_params[str(p)], h, block_cache[str(p)],
                 start_pos, schedule, collect_states, cross_kv,
+                tables=tables, paged=paged,
             )
             new_caches[str(p)] = nc
             pps[str(p)] = pp

@@ -206,6 +206,37 @@ def scatter(
     return jax.tree_util.tree_map(s, pool, lay.axes, update)
 
 
+def gather_mixed(pool: Any, lay: Layout, slots: jax.Array) -> Any:
+    """Row-pack *slot* leaves only; *paged* leaves pass through whole.
+
+    The paged-attention forward reads K/V in place through the block table,
+    so — unlike :func:`gather` — no per-row contiguous view is ever copied
+    out for full-attention leaves.  Dense leaves (recurrent state, sliding
+    rings, cross caches) still need row packing by ``slots``.
+    """
+
+    def g(leaf, desc):
+        if desc.kind == "paged":
+            return leaf
+        return jnp.take(leaf, slots, axis=desc.axis)
+
+    return jax.tree_util.tree_map(g, pool, lay.axes)
+
+
+def scatter_mixed(pool: Any, lay: Layout, slots: jax.Array, update: Any) -> Any:
+    """Inverse of :func:`gather_mixed`: slot leaves write back per-row by
+    ``slots``; paged leaves were updated in place by the forward (the update
+    *is* the new pool) and replace the old leaf wholesale."""
+
+    def sm(leaf, desc, u):
+        if desc.kind == "paged":
+            return u.astype(leaf.dtype)
+        idx = (slice(None),) * desc.axis + (slots,)
+        return leaf.at[idx].set(u.astype(leaf.dtype))
+
+    return jax.tree_util.tree_map(sm, pool, lay.axes, update)
+
+
 def wipe_blocks(pool: Any, lay: Layout, bids: List[int]) -> Any:
     """Reset freed blocks' position bookkeeping (``pos`` -> -1) so stale
     absolute positions never mask into a future owner's attention."""

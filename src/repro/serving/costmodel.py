@@ -69,6 +69,11 @@ class Hardware:
     # main stream's work (contention on HBM + inter-pass scheduling gaps);
     # 0 = ideal dual-issue, 1 = serial execution
     overlap_serial_frac: float = 0.35
+    # fixed per-kernel-launch overhead (dispatch + XLA prologue); passes
+    # fused into an already-running launch (``fused: True`` sub-events of
+    # the engine's single mixed-batch step) pay neither this nor a second
+    # weight stream
+    launch_overhead_s: float = 5e-6
 
     @property
     def stream_contention(self) -> float:
@@ -197,6 +202,7 @@ def flatten_events(
             for k in ("decode", "verify", "prefill"):
                 if k in ev:
                     out.append(ev[k])
+            out.extend(ev.get("verifies", ()))
         else:
             out.append(ev)
     return out
@@ -251,7 +257,10 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
         read_ctx = min(ctx, cfg.window) if cfg.attn_kind == "sliding" else ctx
         n_qchunks = -(-tokens // 512)
         kv_read = kvb * read_ctx * max(n_qchunks, 1)
-    bytes_moved = pbytes + kv_read + kvb * tokens
+    # a fused follower shares the lead pass's launch: the weights are
+    # already streaming and there is no second dispatch
+    fused = ev.get("fused", False)
+    bytes_moved = (0 if fused else pbytes) + kv_read + kvb * tokens
 
     peak = hw.peak_flops
     bw = hw.hbm_bw
@@ -263,7 +272,10 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
 
     t_compute = flops / (peak * max(util, 1e-3))
     t_memory = bytes_moved / bw
-    return max(t_compute, t_memory)
+    t = max(t_compute, t_memory)
+    if not fused:
+        t += hw.launch_overhead_s
+    return t
 
 
 def _lane_times(
@@ -273,13 +285,19 @@ def _lane_times(
     ``overlap`` event: decode + prefill serialize on the main stream, the
     verify sub-pass is the verify stream's work."""
     sub = {k: dict(ev[k]) for k in ("decode", "verify", "prefill") if k in ev}
+    extra = [dict(v) for v in ev.get("verifies", ())]
     if ev.get("invariant"):
         for s in sub.values():
+            s["invariant"] = True
+        for s in extra:
             s["invariant"] = True
     t_main = sum(
         step_time(cfg, s, hw) for k, s in sub.items() if k != "verify"
     )
     t_verify = step_time(cfg, sub["verify"], hw) if "verify" in sub else 0.0
+    # extra verify groups (multi-window iterations) serialize behind the
+    # first on the verify stream
+    t_verify += sum(step_time(cfg, s, hw) for s in extra)
     return t_main, t_verify
 
 
@@ -344,6 +362,8 @@ def simulate_streams(
                     rt.charge(ev[k])
             if "verify" in ev:
                 rt.launch_verify(ev["verify"])
+            for v in ev.get("verifies", ()):
+                rt.launch_verify(v)
         elif kind == "verify":
             rt.launch_verify(ev, sync=not ev.get("deferred"))
         else:

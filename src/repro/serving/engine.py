@@ -72,8 +72,9 @@ from repro.core.determinism import (
     Schedule,
     VERIFY_SCHEDULE,
 )
-from repro.core.verifier import make_verify_fn
+from repro.core.verifier import make_verify_body, make_verify_fn
 from repro.models.base import ModelConfig
+from repro.models.layers import PagedView
 from repro.models.transformer import build_cross_cache, forward
 from repro.serving import costmodel, kv_cache, prefixcache, statepool, streams
 from repro.serving import blockpool
@@ -112,6 +113,7 @@ class Engine:
         num_blocks: Optional[int] = None,  # pool size; None = dense parity
         prefix_cache: bool = True,  # share committed-prefix KV blocks
         mem_policy: Optional[sched.BlockMemoryPolicy] = None,
+        paged_attention: bool = True,  # in-place paged forward + fused step
     ):
         self.cfg = cfg
         self.params = params
@@ -182,7 +184,18 @@ class Engine:
         self.finished: List[Request] = []
         self.events: List[Dict[str, Any]] = []
         self._fns: Dict[Any, Callable] = {}
-        self._verify_fn = make_verify_fn(cfg, group, window, self.pool.layout)
+        # paged in-place forward: decode/verify (and the chunked prefill)
+        # read and repair full-attention KV *through* the block tables
+        # instead of round-tripping a per-row gathered view, which is what
+        # lets one fused launch cover the whole mixed batch.  Requires a
+        # paged pool (full-attention leaves); archs without one (rwkv,
+        # sliding-only) keep the legacy lanes.  Committed streams are
+        # bitwise identical either way.
+        self.paged_attention = bool(paged_attention)
+        self._paged_fwd = self.pool.paged and self.paged_attention
+        self._verify_fn = make_verify_fn(
+            cfg, group, window, self.pool.layout, paged=self._paged_fwd
+        )
         self._now = 0  # logical iteration counter
         # memory-subsystem telemetry
         self.num_preemptions = 0
@@ -229,24 +242,52 @@ class Engine:
     # jitted step builders (cached per shape class)
     # ------------------------------------------------------------------
 
+    def _pview(self) -> Optional[PagedView]:
+        """Static paged-addressing descriptor threaded into ``forward``
+        when the in-place paged path is on (None = legacy gathered
+        views)."""
+        if not self._paged_fwd:
+            return None
+        lay = self.pool.layout
+        return PagedView(lay.block_size, lay.null_bid, lay.scratch_bid)
+
+    def _decode_body(self, B: int, schedule: Schedule) -> Callable:
+        """UNJITTED one-token decode body for a fixed batch size.
+
+        Under the paged path the pool's full-attention leaves are passed
+        whole and the forward reads/writes them through the block tables
+        (``models.layers.attention_paged``) — the per-iteration
+        gather/scatter copy of every row's KV never materializes.  The
+        legacy path keeps the gathered per-row views.  Separate from
+        ``_decode_fn`` so the fused mixed-batch step can compose it with
+        the prefill-chunk and verify bodies under one jit."""
+        cfg, lay = self.cfg, self.pool.layout
+        paged, pview = self._paged_fwd, self._pview()
+
+        def step(params, pool, slots, tables, tokens, pos, seeds, temps,
+                 out_pos, top_ks):
+            if paged:
+                cache = kv_cache.gather_mixed(pool, lay, slots)
+            else:
+                cache = kv_cache.gather(pool, lay, slots, tables)
+            logits, new_cache, _ = forward(
+                params, cfg, tokens[:, None],
+                cache=cache, start_pos=pos, schedule=schedule,
+                tables=tables if paged else None, paged=pview,
+            )
+            nxt = sample_batch(logits[:, 0], seeds, out_pos, temps, top_ks)
+            if paged:
+                pool2 = kv_cache.scatter_mixed(pool, lay, slots, new_cache)
+            else:
+                pool2 = kv_cache.scatter(pool, lay, slots, tables, new_cache)
+            return pool2, nxt
+
+        return step
+
     def _decode_fn(self, B: int, schedule: Schedule) -> Callable:
         key = ("decode", B, schedule)
         if key not in self._fns:
-            cfg, lay = self.cfg, self.pool.layout
-
-            @jax.jit
-            def step(params, pool, slots, tables, tokens, pos, seeds, temps,
-                     out_pos, top_ks):
-                cache = kv_cache.gather(pool, lay, slots, tables)
-                logits, new_cache, _ = forward(
-                    params, cfg, tokens[:, None],
-                    cache=cache, start_pos=pos, schedule=schedule,
-                )
-                nxt = sample_batch(logits[:, 0], seeds, out_pos, temps, top_ks)
-                pool2 = kv_cache.scatter(pool, lay, slots, tables, new_cache)
-                return pool2, nxt
-
-            self._fns[key] = step
+            self._fns[key] = jax.jit(self._decode_body(B, schedule))
         return self._fns[key]
 
     # det: commit-path
@@ -294,45 +335,64 @@ class Engine:
             self._fns[key] = step
         return self._fns[key]
 
+    def _prefill_chunk_body(self, C: int) -> Callable:
+        """UNJITTED fixed-shape C-token prefill-chunk body.
+
+        Recurrent/hybrid archs run a state-collecting variant: the chunk's
+        recurrent state is checkpointed at ``last`` (the chunk's final REAL
+        position), so final-chunk pad embeds never advance the O(1) state —
+        which is what makes a recurrent chunk schedule size-invariant and
+        lets ssm/hybrid prompts join the co-scheduled prefill lane.  The
+        chunk runs the fixed verify-grade schedule in every mode, and the
+        paged in-place variant reads/writes KV through the block table, so
+        both variants are deterministic by construction and bitwise
+        equal."""
+        cfg, lay = self.cfg, self.pool.layout
+        rec = self.has_recurrent_state
+        paged, pview = self._paged_fwd, self._pview()
+        schedule = (
+            INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
+            else VERIFY_SCHEDULE
+        )
+
+        def chunk(params, pool, slot, table, embeds, start, last):
+            slots = slot[None]
+            tables = table[None]
+            if paged:
+                cache = kv_cache.gather_mixed(pool, lay, slots)
+            else:
+                cache = kv_cache.gather(pool, lay, slots, tables)
+            logits, new_cache, per_pos = forward(
+                params, cfg, inputs_embeds=embeds, cache=cache,
+                start_pos=start[None], schedule=schedule,
+                collect_states=rec,
+                tables=tables if paged else None, paged=pview,
+            )
+            if rec:  # state after the last real position, pads dropped
+                new_cache = statepool.merge_rows(
+                    new_cache,
+                    statepool.select_index(per_pos, last[None]),
+                )
+            if paged:
+                pool2 = kv_cache.scatter_mixed(pool, lay, slots, new_cache)
+            else:
+                pool2 = kv_cache.scatter(pool, lay, slots, tables, new_cache)
+            return pool2, logits
+
+        return chunk
+
     # det: commit-path
     def _prefill_chunk_fn(self, C: int) -> Callable:
         """Fixed-shape C-token prefill chunk, usable by every arch
         (generalizes the old sliding-window-only chunk path).  Takes input
         embeddings so token prompts, prefix embeds (multimodal) and encdec
-        decoder prompts all share one shape class per chunk size.
-
-        Recurrent/hybrid archs take a state-collecting variant: the chunk's
-        recurrent state is checkpointed at ``last`` (the chunk's final REAL
-        position), so final-chunk pad embeds never advance the O(1) state —
-        which is what makes a recurrent chunk schedule size-invariant and
-        lets ssm/hybrid prompts join the co-scheduled prefill lane."""
+        decoder prompts all share one shape class per chunk size.  The
+        semantics live in ``_prefill_chunk_body``; this is just the cached
+        standalone jit of it."""
         rec = self.has_recurrent_state
         key = ("prefill_chunk_rec" if rec else "prefill_chunk", C)
         if key not in self._fns:
-            cfg, lay = self.cfg, self.pool.layout
-            schedule = (
-                INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
-                else VERIFY_SCHEDULE
-            )
-
-            @jax.jit
-            def step(params, pool, slot, table, embeds, start, last):
-                slots = slot[None]
-                cache = kv_cache.gather(pool, lay, slots, table[None])
-                logits, new_cache, per_pos = forward(
-                    params, cfg, inputs_embeds=embeds, cache=cache,
-                    start_pos=start[None], schedule=schedule,
-                    collect_states=rec,
-                )
-                if rec:  # state after the last real position, pads dropped
-                    new_cache = statepool.merge_rows(
-                        new_cache,
-                        statepool.select_index(per_pos, last[None]),
-                    )
-                pool2 = kv_cache.scatter(pool, lay, slots, table[None], new_cache)
-                return pool2, logits
-
-            self._fns[key] = step
+            self._fns[key] = jax.jit(self._prefill_chunk_body(C))
         return self._fns[key]
 
     def _cross_fn(self, Se: int) -> Callable:
@@ -345,6 +405,54 @@ class Engine:
                 return build_cross_cache(params, cfg, enc_embeds)
 
             self._fns[key] = build
+        return self._fns[key]
+
+    def _fused_fn(
+        self, C: Optional[int], B: int, schedule: Schedule, n_groups: int
+    ) -> Callable:
+        """ONE jitted launch for the iteration's whole mixed batch: the
+        current prefill chunk (``C`` tokens, or None), the decode batch
+        (``B`` rows, or 0) and ``n_groups`` due verify groups run as
+        sequential sub-passes threading a single pool (+ state-pool anchor
+        on recurrent archs).  The weights stream once per iteration instead
+        of once per sub-pass, and the per-launch fixed overhead is paid
+        once; the sub-passes keep their exact standalone bodies (and their
+        exact per-shape schedules), so fusing moves no committed token.
+        Cached per shape class — (chunk, batch, schedule, group count) —
+        like every other jitted step."""
+        key = ("fused", C, B, schedule, n_groups)
+        if key not in self._fns:
+            pbody = self._prefill_chunk_body(C) if C is not None else None
+            dbody = self._decode_body(B, schedule) if B else None
+            vbody = (
+                make_verify_body(
+                    self.cfg, self.group, self.window, self.pool.layout,
+                    paged=self._paged_fwd,
+                )
+                if n_groups else None
+            )
+            rec = self.has_recurrent_state
+
+            def fused(params, pool, anchor, pargs, dargs, vargs_list):
+                logits_p = nxt = None
+                if pbody is not None:
+                    pool, logits_p = pbody(params, pool, *pargs)
+                if dbody is not None:
+                    pool, nxt = dbody(params, pool, *dargs)
+                vouts = []
+                for vargs in vargs_list:
+                    if rec:
+                        (pool, anchor, commit_rows, n_match, commit_tok,
+                         _v) = vbody(params, pool, anchor, *vargs)
+                        vouts.append((commit_rows, n_match, commit_tok))
+                    else:
+                        pool, n_match, commit_tok, _v = vbody(
+                            params, pool, *vargs
+                        )
+                        vouts.append((None, n_match, commit_tok))
+                return pool, anchor, logits_p, nxt, vouts
+
+            self._fns[key] = jax.jit(fused)
         return self._fns[key]
 
     # ------------------------------------------------------------------
@@ -837,28 +945,34 @@ class Engine:
         else:
             self._insert_prompt_blocks(req)
 
-    def _prefill_advance(self, req: Request, C: int) -> Dict[str, Any]:
-        """Advance one fixed-shape C-token prefill chunk; the final chunk
-        samples T0 (unless this is a restore replay) and flips the request
-        to RUNNING.  Pad positions embed token 0 (exactly the legacy padded
-        passes); their writes land past the allocated block table and are
-        absorbed by the pool's scratch block."""
+    def _prefill_chunk_prep(self, req: Request, C: int):
+        """Device arguments for the request's next C-token prefill chunk.
+        Pad positions embed token 0 (exactly the legacy padded passes);
+        their writes land past the allocated block table and are absorbed
+        by the pool's scratch block.  Returns ``(args, s, real)`` — the
+        chunk cursor and real-token count feed ``_prefill_chunk_post``."""
         s = req.prefill_pos
-        total = req.prefill_total
         emb = self._chunk_embeds(req, s, C)
         real = emb.shape[1]
         if real < C:
             pad = jnp.broadcast_to(self._pad_embed(), (1, C - real, emb.shape[2]))
             emb = jnp.concatenate([emb, pad], axis=1)
         table = self.pool.table_array([req.blocks])[0]
-        t0 = time.perf_counter()
-        self.pool.data, logits = self._prefill_chunk_fn(C)(
-            self.params, self.pool.data, jnp.int32(req.slot), table, emb,
-            jnp.int32(s), jnp.int32(max(real - 1, 0)),
+        args = (
+            jnp.int32(req.slot), table, emb, jnp.int32(s),
+            jnp.int32(max(real - 1, 0)),
         )
-        wall = time.perf_counter() - t0
+        return args, s, real
+
+    def _prefill_chunk_post(
+        self, req: Request, C: int, s: int, real: int, logits, wall: float
+    ) -> Dict[str, Any]:
+        """Host bookkeeping after a chunk pass: advance the cursor; the
+        final chunk samples T0 (unless this is a restore replay) and flips
+        the request to RUNNING."""
         req.last_sched = self._now
         req.prefill_pos = s + real
+        total = req.prefill_total
         done = req.prefill_pos >= total
         replay = req.replaying
         if done:
@@ -871,6 +985,17 @@ class Engine:
             "wall": wall, "iter": self._now, "rid": req.rid, "done": done,
             "replay": replay,
         }
+
+    def _prefill_advance(self, req: Request, C: int) -> Dict[str, Any]:
+        """Advance one fixed-shape C-token prefill chunk as a standalone
+        launch (the fused step composes the same prep/body/post instead)."""
+        args, s, real = self._prefill_chunk_prep(req, C)
+        t0 = time.perf_counter()
+        self.pool.data, logits = self._prefill_chunk_fn(C)(
+            self.params, self.pool.data, *args
+        )
+        wall = time.perf_counter() - t0
+        return self._prefill_chunk_post(req, C, s, real, logits, wall)
 
     # det: commit-path
     def _prefill(self, req: Request) -> None:
@@ -965,12 +1090,17 @@ class Engine:
     # steps
     # ------------------------------------------------------------------
 
-    def _decode_step(self, batch: List[Request]) -> Dict[str, Any]:
-        B = len(batch)
+    def _decode_schedule(self, B: int) -> Schedule:
         if self.mode == Mode.BATCH_INVARIANT:
-            schedule = INVARIANT_SCHEDULE
-        else:
-            schedule = self.policy.schedule_for(B)
+            return INVARIANT_SCHEDULE
+        return self.policy.schedule_for(B)
+
+    def _decode_prep(self, batch: List[Request]):
+        """Device arguments for one decode pass over ``batch``.  Safe to
+        run before OR after this iteration's verify pre-launch: submitting
+        a window only moves the candidates' head into the in-flight FIFO's
+        tail, so ``committed + speculation`` — everything read here — is
+        unchanged by it."""
         slots = jnp.array([r.slot for r in batch], jnp.int32)
         tables = self.pool.table_array([r.blocks for r in batch])
         last_tok, pos, out_pos, seeds, temps, top_ks = [], [], [], [], [], []
@@ -985,14 +1115,21 @@ class Engine:
             temps.append(r.sampling.temperature)
             top_ks.append(r.sampling.top_k)
             r.last_sched = self._now
-        t0 = time.perf_counter()
-        self.pool.data, nxt = self._decode_fn(B, schedule)(
-            self.params, self.pool.data, slots, tables,
+        args = (
+            slots, tables,
             jnp.array(last_tok, jnp.int32), jnp.array(pos, jnp.int32),
             jnp.array(seeds, jnp.int32), jnp.array(temps, jnp.float32),
             jnp.array(out_pos, jnp.int32), jnp.array(top_ks, jnp.int32),
         )
-        wall = time.perf_counter() - t0
+        return args, pos
+
+    def _decode_post(
+        self, batch: List[Request], schedule: Schedule, pos: List[int],
+        nxt, wall: float,
+    ) -> Dict[str, Any]:
+        """Land one decode pass's tokens: fresh candidates for det
+        requests (plus window-state marking), committed tokens otherwise."""
+        B = len(batch)
         nxt = [int(t) for t in nxt]
         for r, t in zip(batch, nxt):
             if self.mode == Mode.LLM42 and r.sampling.is_deterministic:
@@ -1006,11 +1143,169 @@ class Engine:
             "rids": [r.rid for r in batch],
         }
 
+    def _decode_step(self, batch: List[Request]) -> Dict[str, Any]:
+        B = len(batch)
+        schedule = self._decode_schedule(B)
+        args, pos = self._decode_prep(batch)
+        t0 = time.perf_counter()
+        self.pool.data, nxt = self._decode_fn(B, schedule)(
+            self.params, self.pool.data, *args
+        )
+        wall = time.perf_counter() - t0
+        return self._decode_post(batch, schedule, pos, nxt, wall)
+
+    def _pad_verify_row(self, inputs, cands, cand_lens, starts, bases, slots,
+                        seeds, temps, tks, ring_idxs, table_rows) -> None:
+        """One padding row for a short verify group: writes go to the
+        pool's scratch slot; the empty block table sends paged reads to
+        the frozen null block and paged writes to the scratch block."""
+        W = self.window
+        inputs.append([0] * W)
+        cands.append([-1] * (W - 1))
+        cand_lens.append(0)
+        starts.append(0)
+        bases.append(0)
+        slots.append(self.pool.scratch_slot)
+        seeds.append(0)
+        temps.append(0.0)
+        tks.append(0)
+        ring_idxs.append(0)
+        table_rows.append([])
+
+    def _verify_prelaunch(self, rows: List[Request]):
+        """Host protocol work for one deferred verify group, BEFORE the
+        device pass: build each row's replay inputs, then move its window
+        into the request's in-flight FIFO as a placeholder record
+        (``n_match = -1`` keeps ``apply_ready`` from splicing it before the
+        verdict payload lands in ``_verify_postlaunch``).  Submitting at
+        prep time is what lets several chained groups of one iteration
+        stack: group k+1's rows condition on the windows group k just
+        pushed.  It is also safe ahead of the same iteration's decode
+        bookkeeping — the submit only moves the candidates' head into the
+        FIFO tail, leaving ``committed + speculation`` unchanged, and the
+        fresh decode token lands behind the window just built."""
+        G, W = self.group, self.window
+        assert len({id(r) for r in rows}) == len(rows), (
+            "a request may contribute one window per grouped pass — chained "
+            "windows replay sequentially, never inside one batch"
+        )
+        n_pad = G - len(rows)
+        inputs, cands, cand_lens, starts, bases, slots, seeds, temps, tks = (
+            [], [], [], [], [], [], [], [], []
+        )
+        ring_idxs: List[int] = []
+        fls: List[pipeline.InflightVerify] = []
+        table_rows: List[List[int]] = []
+        for r in rows:
+            assert len(r.pipeline) < self.spec_depth, (
+                "scheduler plan exceeds the configured spec_depth"
+            )
+            ring_idx = r.window_seq % self.spec_depth
+            i, c, cl, sp, ob = dvr.build_verify_row(r, W)
+            inputs.append(i)
+            cands.append(c)
+            cand_lens.append(cl)
+            starts.append(sp)
+            bases.append(ob)
+            slots.append(r.slot)
+            seeds.append(r.sampling.seed)
+            temps.append(r.sampling.temperature)
+            tks.append(r.sampling.top_k)
+            table_rows.append(r.blocks)
+            r.last_sched = self._now
+            ring_idxs.append(ring_idx)
+            fls.append(pipeline.submit_window(
+                r, W, 0.0, float("inf"), ring_idx=ring_idx
+            ))
+        for _ in range(n_pad):
+            self._pad_verify_row(inputs, cands, cand_lens, starts, bases,
+                                 slots, seeds, temps, tks, ring_idxs,
+                                 table_rows)
+        args = (
+            jnp.array(slots, jnp.int32),
+            self.pool.table_array(table_rows),
+            jnp.array(starts, jnp.int32),
+            jnp.array(inputs, jnp.int32), jnp.array(cands, jnp.int32),
+            jnp.array(cand_lens, jnp.int32), jnp.array(seeds, jnp.int32),
+            jnp.array(temps, jnp.float32), jnp.array(bases, jnp.int32),
+            jnp.array(tks, jnp.int32),
+        )
+        return args, fls, ring_idxs, slots, starts, n_pad
+
+    def _verify_event(
+        self, rows: List[Request], starts: List[int], n_pad: int,
+        wall: float, n_decodable: int, deferred: bool,
+    ) -> Dict[str, Any]:
+        G, W = self.group, self.window
+        return {
+            "kind": "verify", "group": len(rows), "window": W,
+            "pad_rows": n_pad,
+            "ctx_sum": sum(starts) + W * G, "wall": wall, "iter": self._now,
+            # requests that could decode this iteration — under the pause
+            # policy these are the requests the verify pass stalls; under
+            # overlap they ride in the composite event's decode batch
+            "rids": [r.rid for r in rows], "n_decodable": n_decodable,
+            # stream assignment for per-stream time accounting: a deferred
+            # pass rides the verify stream; a sync pass blocks the main one
+            "deferred": deferred,
+        }
+
+    def _verify_postlaunch(
+        self, rows: List[Request], fls, ev: Dict[str, Any], ring_idxs,
+        slots, starts, n_match, commit_tok, commit_rows,
+    ) -> None:
+        """Land the host side of one deferred verify pass: stream-clock
+        launch, state-pool checkpoints, verdict payloads into the
+        placeholder FIFO records — and the post-submit state rule,
+        re-applied here because it must be evaluated AFTER this iteration's
+        decode bookkeeping (the fused step submits windows before the
+        decode's candidate lands; the rule's ``done_decoding`` answer is
+        only final once it has)."""
+        W = self.window
+        ready_at = self.runtime.launch_verify(ev, sync=False)
+        submitted_at = self.runtime.now
+        if commit_rows is not None:
+            self.statepool.checkpoint(ring_idxs, slots, commit_rows)
+        n_match = [int(n) for n in n_match]
+        commit_tok = [int(t) for t in commit_tok]
+        for i, r in enumerate(rows):
+            fl = fls[i]
+            fl.submitted_at, fl.ready_at = submitted_at, ready_at
+            fl.n_match, fl.commit_tok = n_match[i], commit_tok[i]
+            self.statepool.note_submit(r.slot, starts[i] + W)
+            if r.state is not State.FINISHED:
+                r.state = (
+                    State.AWAITING_VERIFY if r.done_decoding()
+                    else State.RUNNING
+                )
+
+    def _pack_verify_groups(
+        self, entries: List[Request]
+    ) -> List[List[Request]]:
+        """Split the plan's verify entries into grouped passes.  The k-th
+        occurrence of a request is its k-th chained window this iteration
+        and must replay after its predecessors, so occurrences layer:
+        layer k's groups follow every layer < k, and each group holds up
+        to ``group`` DISTINCT requests."""
+        layers: List[List[Request]] = []
+        seen: Dict[int, int] = {}
+        for r in entries:
+            k = seen.get(id(r), 0)
+            seen[id(r)] = k + 1
+            if k == len(layers):
+                layers.append([])
+            layers[k].append(r)
+        groups: List[List[Request]] = []
+        for layer in layers:
+            for i in range(0, len(layer), self.group):
+                groups.append(layer[i:i + self.group])
+        return groups
+
     def _verify_step(
         self, group: List[Request], *, defer: bool = False,
         n_decodable: int = 0,
     ) -> Dict[str, Any]:
-        """Run one grouped verification pass.
+        """Run one grouped verification pass as a standalone launch.
 
         ``defer=False`` (pause policy / an AdaptivePolicy sync plan): the
         verdict is applied synchronously, exactly the seed behaviour; the
@@ -1031,6 +1326,28 @@ class Engine:
         """
         G, W = self.group, self.window
         rows = group[:G]
+        if defer:
+            args, fls, ring_idxs, slots, starts, n_pad = (
+                self._verify_prelaunch(rows)
+            )
+            t0 = time.perf_counter()
+            if self.has_recurrent_state:
+                (self.pool.data, self.statepool.anchor, commit_rows, n_match,
+                 commit_tok, _v) = self._verify_fn(
+                    self.params, self.pool.data, self.statepool.anchor, *args
+                )
+            else:
+                commit_rows = None
+                self.pool.data, n_match, commit_tok, _v = self._verify_fn(
+                    self.params, self.pool.data, *args
+                )
+            wall = time.perf_counter() - t0
+            ev = self._verify_event(rows, starts, n_pad, wall, n_decodable,
+                                    True)
+            self._verify_postlaunch(rows, fls, ev, ring_idxs, slots, starts,
+                                    n_match, commit_tok, commit_rows)
+            return ev
+        # ---- sync path: FIFOs are empty, the verdict applies on the spot
         assert len({id(r) for r in rows}) == len(rows), (
             "a request may contribute one window per grouped pass — chained "
             "windows replay sequentially, never inside one batch"
@@ -1039,7 +1356,7 @@ class Engine:
         inputs, cands, cand_lens, starts, bases, slots, seeds, temps, tks = (
             [], [], [], [], [], [], [], [], []
         )
-        ring_idxs = []
+        ring_idxs: List[int] = []
         table_rows: List[List[int]] = []
         for r in rows:
             i, c, cl, sp, ob = dvr.build_verify_row(r, W)
@@ -1054,27 +1371,11 @@ class Engine:
             tks.append(r.sampling.top_k)
             table_rows.append(r.blocks)
             r.last_sched = self._now
-            if defer:
-                assert len(r.pipeline) < self.spec_depth, (
-                    "scheduler plan exceeds the configured spec_depth"
-                )
-                ring_idxs.append(r.window_seq % self.spec_depth)
-            else:
-                ring_idxs.append(0)  # sync: FIFO empty, ring 0 is free
+            ring_idxs.append(0)  # sync: FIFO empty, ring 0 is free
         for _ in range(n_pad):
-            inputs.append([0] * W)
-            cands.append([-1] * (W - 1))
-            cand_lens.append(0)
-            starts.append(0)
-            bases.append(0)
-            slots.append(self.pool.scratch_slot)
-            seeds.append(0)
-            temps.append(0.0)
-            tks.append(0)
-            ring_idxs.append(0)
-            # pad rows carry an empty block table: reads hit the frozen
-            # null block, writes are absorbed by the scratch block
-            table_rows.append([])
+            self._pad_verify_row(inputs, cands, cand_lens, starts, bases,
+                                 slots, seeds, temps, tks, ring_idxs,
+                                 table_rows)
         t0 = time.perf_counter()
         args = (
             jnp.array(slots, jnp.int32),
@@ -1098,36 +1399,155 @@ class Engine:
         wall = time.perf_counter() - t0
         n_match = [int(n) for n in n_match]
         commit_tok = [int(t) for t in commit_tok]
-        ev = {
-            "kind": "verify", "group": len(rows), "window": W, "pad_rows": n_pad,
-            "ctx_sum": sum(starts) + W * G, "wall": wall, "iter": self._now,
-            # requests that could decode this iteration — under the pause
-            # policy these are the requests the verify pass stalls; under
-            # overlap they ride in the composite event's decode batch
-            "rids": [r.rid for r in rows], "n_decodable": n_decodable,
-            # stream assignment for per-stream time accounting: a deferred
-            # pass rides the verify stream; a sync pass blocks the main one
-            "deferred": defer,
-        }
-        ready_at = self.runtime.launch_verify(ev, sync=not defer)
-        if defer:
-            submitted_at = self.runtime.now
-            for i, r in enumerate(rows):
-                fl = pipeline.submit_window(
-                    r, W, submitted_at, ready_at, ring_idx=ring_idxs[i]
+        ev = self._verify_event(rows, starts, n_pad, wall, n_decodable,
+                                False)
+        self.runtime.launch_verify(ev, sync=True)
+        for r, n, t in zip(rows, n_match, commit_tok):
+            dvr.apply_verify_result(r, n, t, window=W)
+            if self.statepool.active:
+                # live state + replay anchor <- the commit-index state
+                # the pass just checkpointed (ring 0)
+                self.pool.data = self.statepool.restore(
+                    self.pool.data, r.slot, 0
                 )
-                fl.n_match, fl.commit_tok = n_match[i], commit_tok[i]
-                self.statepool.note_submit(r.slot, starts[i] + W)
-        else:
-            for r, n, t in zip(rows, n_match, commit_tok):
-                dvr.apply_verify_result(r, n, t, window=W)
-                if self.statepool.active:
-                    # live state + replay anchor <- the commit-index state
-                    # the pass just checkpointed (ring 0)
-                    self.pool.data = self.statepool.restore(
-                        self.pool.data, r.slot, 0
-                    )
         return ev
+
+    def _fused_step(self, plan: sched.Plan, view: sched.SchedulerView):
+        """Run the iteration's entire device side — the current prefill
+        chunk, the decode batch and EVERY due verify group — as ONE fused
+        mixed-batch launch (``_fused_fn``) threading a single pool.  The
+        paged in-place forward is what makes this possible: no sub-pass
+        needs a privately gathered copy of the pool, so they chain on the
+        shared leaves with no host round-trip between them.
+
+        Host order: all preps first (prefill args, decode args, verify
+        pre-launches in layer order), one device call, then prefill post,
+        decode post (fresh candidates + window marking) and verify
+        post-launches in layer order — each post-launch re-applies the
+        post-submit state rule, so the request ends the iteration exactly
+        where the legacy decode-then-submit order would put it.  Wall time
+        splits equally across sub-passes; the lead sub-event (prefill,
+        else decode, else the first verify group) carries the iteration's
+        single weight stream + launch overhead in the cost model and every
+        follower is marked ``fused``.  Returns ``(pev, dev, vev, vextra)``
+        — the composite-event parts (``vextra`` = verify groups past the
+        first)."""
+        C = self._chunk_size()
+        preq = plan.prefill
+        pargs = ps = preal = None
+        if preq is not None:
+            pargs, ps, preal = self._prefill_chunk_prep(preq, C)
+        batch = [r for r in plan.decode if not r.done_decoding()]
+        B = len(batch)
+        schedule = self._decode_schedule(B)
+        dargs = dpos = None
+        if batch:
+            dargs, dpos = self._decode_prep(batch)
+        groups = (
+            self._pack_verify_groups(list(plan.verify)) if plan.verify else []
+        )
+        vargs_list, vstates = [], []
+        for rows in groups:
+            args, fls, ring_idxs, slots, starts, n_pad = (
+                self._verify_prelaunch(rows)
+            )
+            vargs_list.append(args)
+            vstates.append((rows, fls, ring_idxs, slots, starts, n_pad))
+        n_subs = (preq is not None) + (1 if batch else 0) + len(groups)
+        if n_subs == 0:
+            return None, None, None, []
+        n_decodable = len(sched.decodable(view))
+        rec = self.has_recurrent_state
+        if n_subs == 1:
+            # single lane: dispatch to the standalone per-lane jit (same
+            # bodies, no extra compile variants for degenerate shapes)
+            if preq is not None:
+                t0 = time.perf_counter()
+                self.pool.data, logits = self._prefill_chunk_fn(C)(
+                    self.params, self.pool.data, *pargs
+                )
+                pev = self._prefill_chunk_post(
+                    preq, C, ps, preal, logits, time.perf_counter() - t0
+                )
+                self.runtime.charge(pev)
+                return pev, None, None, []
+            if batch:
+                t0 = time.perf_counter()
+                self.pool.data, nxt = self._decode_fn(B, schedule)(
+                    self.params, self.pool.data, *dargs
+                )
+                dev = self._decode_post(
+                    batch, schedule, dpos, nxt, time.perf_counter() - t0
+                )
+                self.runtime.charge(dev)
+                return None, dev, None, []
+            rows, fls, ring_idxs, slots, starts, n_pad = vstates[0]
+            t0 = time.perf_counter()
+            if rec:
+                (self.pool.data, self.statepool.anchor, commit_rows, n_match,
+                 commit_tok, _v) = self._verify_fn(
+                    self.params, self.pool.data, self.statepool.anchor,
+                    *vargs_list[0]
+                )
+            else:
+                commit_rows = None
+                self.pool.data, n_match, commit_tok, _v = self._verify_fn(
+                    self.params, self.pool.data, *vargs_list[0]
+                )
+            vev = self._verify_event(
+                rows, starts, n_pad, time.perf_counter() - t0, n_decodable,
+                True,
+            )
+            self._verify_postlaunch(rows, fls, vev, ring_idxs, slots, starts,
+                                    n_match, commit_tok, commit_rows)
+            return None, None, vev, []
+
+        t0 = time.perf_counter()
+        anchor = self.statepool.anchor if rec else None
+        pool, anchor, logits_p, nxt, vouts = self._fused_fn(
+            C if preq is not None else None, B, schedule, len(groups)
+        )(
+            self.params, self.pool.data, anchor,
+            pargs if pargs is not None else (),
+            dargs if dargs is not None else (),
+            tuple(vargs_list),
+        )
+        self.pool.data = pool
+        if rec:
+            self.statepool.anchor = anchor
+        wall = time.perf_counter() - t0
+        share = wall / n_subs
+
+        pev = dev = vev = None
+        vextra: List[Dict[str, Any]] = []
+        lead = True
+        if preq is not None:
+            pev = self._prefill_chunk_post(preq, C, ps, preal, logits_p,
+                                           share)
+            lead = False
+            self.runtime.charge(pev)
+        if batch:
+            dev = self._decode_post(batch, schedule, dpos, nxt, share)
+            if not lead:
+                dev["fused"] = True
+            lead = False
+            self.runtime.charge(dev)
+        for gi, (rows, fls, ring_idxs, slots, starts, n_pad) in enumerate(
+            vstates
+        ):
+            commit_rows, n_match, commit_tok = vouts[gi]
+            ev = self._verify_event(rows, starts, n_pad, share, n_decodable,
+                                    True)
+            if not lead:
+                ev["fused"] = True
+            lead = False
+            self._verify_postlaunch(rows, fls, ev, ring_idxs, slots, starts,
+                                    n_match, commit_tok, commit_rows)
+            if vev is None:
+                vev = ev
+            else:
+                vextra.append(ev)
+        return pev, dev, vev, vextra
 
     def _finish(self, req: Request) -> None:
         """Retire one request: committed-stream blocks go to the prefix
@@ -1176,6 +1596,13 @@ class Engine:
         chunk touches only its own (PREFILLING) slot, so it is
         order-independent.
 
+        Under the paged in-place forward (``paged_attention=True`` on a
+        paged pool) a deferring iteration runs its whole device side as
+        ONE fused launch (``_fused_step``): same sub-pass bodies, same
+        host bookkeeping order for every observable effect, one weight
+        stream.  Archs without paged KV — and sync-verify plans — keep
+        the legacy one-launch-per-role lanes below.
+
         Time accounting rides the dual-stream runtime: prefill and decode
         passes charge the main stream (serial — two launches on one
         stream), a deferred verify launches on the verify stream
@@ -1195,31 +1622,52 @@ class Engine:
         stalled = self._ensure_memory()
         view = self._view(stalled)
         plan = self.scheduler.plan(view)
+        defer = self.scheduler.defers_verify and not plan.sync_verify
         pev = dev = vev = None
-        if plan.prefill is not None:
-            pev = self._prefill_advance(plan.prefill, self._chunk_size())
-            self.runtime.charge(pev)
-        if plan.decode:
-            batch = [r for r in plan.decode if not r.done_decoding()]
-            if batch:
-                dev = self._decode_step(batch)
-                self.runtime.charge(dev)
-        if plan.verify:
-            vev = self._verify_step(
-                plan.verify,
-                defer=self.scheduler.defers_verify and not plan.sync_verify,
-                n_decodable=len(sched.decodable(view)),
-            )
+        vextra: List[Dict[str, Any]] = []
+        if self._paged_fwd and defer:
+            # fused mixed-batch step: prefill chunk + decode + every due
+            # verify group under ONE launch (the tentpole path)
+            pev, dev, vev, vextra = self._fused_step(plan, view)
+        else:
+            # legacy lanes: one launch per role, gathered KV views.  A
+            # plan with chained-window repeats (multi-group expansion)
+            # collapses to first occurrences — the legacy verify pass
+            # launches one window per request per iteration.
+            if plan.prefill is not None:
+                pev = self._prefill_advance(plan.prefill, self._chunk_size())
+                self.runtime.charge(pev)
+            if plan.decode:
+                batch = [r for r in plan.decode if not r.done_decoding()]
+                if batch:
+                    dev = self._decode_step(batch)
+                    self.runtime.charge(dev)
+            if plan.verify:
+                rows, seen = [], set()
+                for r in plan.verify:
+                    if id(r) not in seen:
+                        seen.add(id(r))
+                        rows.append(r)
+                vev = self._verify_step(
+                    rows, defer=defer,
+                    n_decodable=len(sched.decodable(view)),
+                )
         self.runtime.end_iteration()
 
         subs = [("decode", dev), ("verify", vev), ("prefill", pev)]
         present = [(k, ev) for k, ev in subs if ev is not None]
-        if len(present) >= 2:
-            self.events.append({
+        if present and (len(present) + len(vextra)) >= 2:
+            comp = {
                 "kind": "overlap", **dict(present),
-                "wall": sum(ev["wall"] for _, ev in present),
+                "wall": sum(ev["wall"] for _, ev in present)
+                + sum(ev["wall"] for ev in vextra),
                 "iter": self._now,
-            })
+            }
+            if vextra:
+                # verify groups past the first (chained windows landing
+                # the iteration they became due) ride along explicitly
+                comp["verifies"] = vextra
+            self.events.append(comp)
         elif present:
             self.events.append(present[0][1])
         if present or applied:

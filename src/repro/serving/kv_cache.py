@@ -73,6 +73,11 @@ def scatter_slots(pool: Any, axes: Any, slots: jax.Array, update: Any) -> Any:
 gather = blockpool.gather
 scatter = blockpool.scatter
 
+#: in-place paged forward entry points: slot leaves row-packed, paged
+#: leaves passed whole (the forward writes them through the block table)
+gather_mixed = blockpool.gather_mixed
+scatter_mixed = blockpool.scatter_mixed
+
 
 class CachePool:
     """Mutable host-side wrapper around the pooled cache pytree.

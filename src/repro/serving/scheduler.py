@@ -165,6 +165,33 @@ def verify_ready(
     ]
 
 
+def expand_chained(
+    view: SchedulerView, ready: List[Request], depth_of=None
+) -> List[Request]:
+    """Lift the one-window-per-iteration cap: a request whose speculation
+    buffer holds SEVERAL due windows (spec_depth > 1 — e.g. its verdicts
+    all landed this iteration and re-opened the pipeline) contributes one
+    plan entry PER submittable window, as a contiguous run.  The engine's
+    fused step packs the k-th occurrences into the k-th chained grouped
+    pass, so every due window lands the iteration it became due instead of
+    dribbling out one per iteration.  ``depth_of`` overrides the
+    per-request pipelining bound (AdaptivePolicy's acceptance-scaled
+    depth); entries stay bounded by FIFO room either way.  Engines that
+    launch one window per request per iteration (the legacy lanes) simply
+    collapse the run to its first entry — pacing, never semantics."""
+    k = dvr.candidates_per_window(view.window)
+    out: List[Request] = []
+    for r in ready:
+        d = view.spec_depth if depth_of is None else depth_of(r)
+        room = d - len(r.pipeline)
+        full = len(r.candidates) // k
+        windows = full + (
+            1 if (len(r.candidates) % k and r.done_decoding()) else 0
+        )
+        out.extend([r] * max(1, min(windows, room)))
+    return out
+
+
 def pick_prefill(view: SchedulerView) -> Optional[Request]:
     """The prefill chunk that rides a co-scheduled iteration, picked
     shortest-remaining-first — a short prompt's single chunk never queues
@@ -255,7 +282,8 @@ class OverlapPolicy(SchedulePolicy):
 
     def plan(self, view: SchedulerView) -> Plan:
         return self._compose(
-            view, verify_ready(view), decodable(view), view.running
+            view, expand_chained(view, verify_ready(view)), decodable(view),
+            view.running,
         )
 
     def _compose(
@@ -295,14 +323,21 @@ class OverlapPolicy(SchedulePolicy):
             room = self.max_inflight - view.verify_inflight
             ready = ready[: max(room, 0)]
         if ready and view.speculate_past_inflight:
-            # the rows being submitted (the engine takes the first `group`)
-            # decode in this very iteration too — their first token past
-            # the window rides the launch quantum instead of costing an
-            # iteration of their own.  The engine decodes BEFORE launching
-            # the verify, so the window's KV repair still wins (engine.step
-            # docstring); excluded on recurrent archs like any other
-            # past-window speculation
-            for r in ready[: view.group]:
+            # the rows being submitted (the engine takes the first `group`
+            # DISTINCT requests — chained-window entries repeat) decode in
+            # this very iteration too — their first token past the window
+            # rides the launch quantum instead of costing an iteration of
+            # their own.  The engine decodes BEFORE landing the verify
+            # submits' state rule, so the window's KV repair still wins
+            # (engine.step docstring); excluded on recurrent archs like
+            # any other past-window speculation
+            seen: Set[int] = set()
+            for r in ready:
+                if len(seen) >= view.group:
+                    break
+                if id(r) in seen:
+                    continue
+                seen.add(id(r))
                 if not r.done_decoding():
                     dec.append(r)
         return Plan(decode=dec, verify=ready, prefill=pick_prefill(view))
@@ -396,11 +431,21 @@ class AdaptivePolicy(SchedulePolicy):
             )
         ]
 
+    def _expanded_ready(self, view: SchedulerView) -> List[Request]:
+        """Promoted ready set with chained-window entries, bounded by each
+        request's ACCEPTANCE-SCALED depth (not the engine's full
+        spec_depth): a request trending toward rollback keeps a shallow
+        pipeline even when several of its windows are due at once."""
+        return expand_chained(
+            view, self._promoted_ready(view),
+            depth_of=lambda r: self._pipeline_depth(view, r),
+        )
+
     def plan(self, view: SchedulerView) -> Plan:
         self._update_demotions(view)
         if not self._demoted:
             return self._overlap._compose(
-                view, self._promoted_ready(view), decodable(view),
+                view, self._expanded_ready(view), decodable(view),
                 view.running,
             )
         demoted = [r for r in view.running if r.rid in self._demoted]
@@ -435,7 +480,7 @@ class AdaptivePolicy(SchedulePolicy):
         # requests may decode (filling their eager window) but never
         # launch deferred, and — because they can never join a deferred
         # group — they are excluded from the group-holding pool.
-        ready = self._promoted_ready(view)
+        ready = self._expanded_ready(view)
         det_pool = [r for r in view.running if r.rid not in self._demoted]
         return self._overlap._compose(view, ready, dec, det_pool)
 

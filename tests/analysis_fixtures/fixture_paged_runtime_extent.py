@@ -1,0 +1,108 @@
+"""SEEDED VIOLATION (do not fix): reduction extent from a runtime table.
+
+A paged-attention variant that walks the block table with a GRID axis
+instead of an in-kernel loop: grid axis 2 merges per-block softmax
+partials through scratch, so it is a reduction axis (the ``out_specs``
+index_map ignores it) — and its extent is ``tables.shape[1]``, the
+caller's block-table reach.  Two requests whose tables were allocated at
+different lengths run DIFFERENT reduction trees over identical masked
+content, which is exactly the workload-dependent schedule the
+determinism contract forbids on the commit path.  The checker must flag
+  * kernel_lint/grid-reduction-extent   (axis 2 extent is shape-derived)
+The repo's real commit kernel (``kernels/paged_attention.py``) avoids
+this by keeping both grid axes output-indexed and walking the table in a
+``fori_loop`` of literal ``block_size`` chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(q_ref, kp_ref, vp_ref, pp_ref, tab_ref, o_ref, m_ref, d_ref,
+            acc_ref, *, n_blocks: int, block_size: int, scale: float):
+    s_idx = pl.program_id(2)
+    q = q_ref[0, 0].astype(F32) * scale  # (G, D)
+    bid = tab_ref[0, s_idx]
+    kb = pl.load(
+        kp_ref, (pl.dslice(bid, 1), slice(None), slice(None), slice(None))
+    ).reshape(block_size, q.shape[-1]).astype(F32)
+    vb = pl.load(
+        vp_ref, (pl.dslice(bid, 1), slice(None), slice(None), slice(None))
+    ).reshape(block_size, q.shape[-1]).astype(F32)
+    pv = pl.load(pp_ref, (pl.dslice(bid, 1), slice(None))).reshape(block_size)
+
+    s = jnp.dot(q, kb.T, preferred_element_type=F32)
+    s = jnp.where((pv >= 0)[None, :], s, -jnp.inf)
+    m_c = jnp.maximum(jnp.max(s, axis=-1), -1e30)
+    e = jnp.exp(s - m_c[:, None])
+    d_c = jnp.sum(e, axis=-1)
+    o_c = jnp.dot(e, vb, preferred_element_type=F32)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = m_c
+        d_ref[...] = d_c
+        acc_ref[...] = o_c
+
+    @pl.when(s_idx > 0)
+    def _merge():
+        m_new = jnp.maximum(m_ref[...], m_c)
+        a_prev = jnp.exp(m_ref[...] - m_new)
+        a_c = jnp.exp(m_c - m_new)
+        m_ref[...] = m_new
+        d_ref[...] = d_ref[...] * a_prev + d_c * a_c
+        acc_ref[...] = acc_ref[...] * a_prev[:, None] + o_c * a_c[:, None]
+
+    @pl.when(s_idx == n_blocks - 1)
+    def _emit():
+        denom = jnp.maximum(d_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_table_grid(
+    q: jax.Array,         # (B, H, D)
+    k_pool: jax.Array,    # (NB, bs, KV, D)
+    v_pool: jax.Array,    # (NB, bs, KV, D)
+    pos_pool: jax.Array,  # (NB, bs)
+    tables: jax.Array,    # (B, nblk)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, D = q.shape
+    NB, bs, KVH, _ = k_pool.shape
+    # VIOLATION: the reduction trip count is the runtime table length —
+    # reallocate the table and the merge tree over the SAME tokens changes
+    nblk = tables.shape[1]
+    qg = q.reshape(B, KVH, H // KVH, D)
+    B, KV, G, D = qg.shape
+    tab = jnp.where(tables < 0, NB - 2, tables).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, n_blocks=nblk, block_size=bs, scale=D ** -0.5
+        ),
+        grid=(B, KV, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((NB, bs, 1, D), lambda b, h, s: (0, 0, h, 0)),
+            pl.BlockSpec((NB, bs, 1, D), lambda b, h, s: (0, 0, h, 0)),
+            pl.BlockSpec((NB, bs), lambda b, h, s: (0, 0)),
+            pl.BlockSpec((1, nblk), lambda b, h, s: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), F32),
+        scratch_shapes=[
+            pltpu.VMEM((G,), F32),
+            pltpu.VMEM((G,), F32),
+            pltpu.VMEM((G, D), F32),
+        ],
+        interpret=interpret,
+    )(qg, k_pool, v_pool, pos_pool, tab)
+    return out.reshape(B, H, D)

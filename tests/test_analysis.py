@@ -87,6 +87,19 @@ def test_fixture_mode_cli_exits_nonzero():
     assert rc == 1
 
 
+def test_fixture_paged_runtime_extent_flagged():
+    """A block-table walk run as a GRID axis: the reduction extent is the
+    runtime table length (``tables.shape[1]``), not a literal — the
+    shape-adaptive schedule the real paged kernel's fori_loop avoids."""
+    path = _fixture("fixture_paged_runtime_extent.py")
+    fs = kernel_lint.run_pass(REPO, files=[path])
+    extent = [f for f in fs if f.rule == "grid-reduction-extent"]
+    assert extent, fs
+    assert all("fixture_paged_runtime_extent" in f.where for f in extent)
+    # and the CLI treats it as a blocking finding
+    assert check.main(["--paths", str(path)]) == 1
+
+
 # ---------------------------------------------------------------------------
 # the real repo must be clean (source passes; trace passes are slow-tier)
 

@@ -242,7 +242,10 @@ class TestPrefillCostModel:
         kvb = costmodel.kv_bytes_per_token(cfg, hw.dtype_bytes)
         weights_and_writes = (pbytes + kvb * 256) / hw.hbm_bw
         assert t > weights_and_writes  # reads contribute, not just writes
-        expected = (pbytes + kvb * 256 + kvb * 128) / hw.hbm_bw
+        expected = (
+            (pbytes + kvb * 256 + kvb * 128) / hw.hbm_bw
+            + hw.launch_overhead_s
+        )
         assert t == pytest.approx(expected)
 
     def test_chunk_cost_grows_with_context_depth(self):
