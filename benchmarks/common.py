@@ -74,11 +74,13 @@ def run_scenario(
     cfg, params, requests: List[Request], *, mode: Mode = Mode.LLM42,
     window: int = 8, group: int = 4, max_batch: int = 8, capacity: int = 256,
     policy: ReductionPolicy = BENCH_POLICY, scheduler=None,
-    prefill_chunk: int = 0,
+    prefill_chunk: int = 0, **eng_kw,
 ) -> Dict:
+    """Extra ``eng_kw`` pass straight to ``Engine`` (e.g. ``trace=True`` to
+    capture a Chrome-trace of the scenario via ``engine.obs.tracer``)."""
     eng = Engine(cfg, params, mode=mode, policy=policy, window=window,
                  group=group, max_batch=max_batch, capacity=capacity,
-                 scheduler=scheduler, prefill_chunk=prefill_chunk)
+                 scheduler=scheduler, prefill_chunk=prefill_chunk, **eng_kw)
     for r in requests:
         eng.submit(r)
     t0 = time.time()
@@ -93,6 +95,7 @@ def run_scenario(
         "out_tokens": out_tokens,
         "rollbacks": sum(r.num_rollbacks for r in done),
         "recomputed": sum(r.num_recomputed_tokens for r in done),
+        "metrics": eng.obs.metrics.snapshot(),
     }
 
 

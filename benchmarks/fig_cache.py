@@ -71,15 +71,15 @@ def _run(cfg, params, fcfg, n, qps, *, sys_len, tail_len, max_new,
     arrivals = poisson_arrivals(n, qps, seed=seed)
     res = run_online(engine, fcfg, list(zip(reqs, arrivals)))
     tt = list(res.ttfts.values())
-    ms = engine.mem_stats()
+    snap = res.metrics  # registry snapshot (mem_stats is a shim over it)
     return {
         "ttft_p50": percentile(tt, 50),
         "ttft_p99": percentile(tt, 99),
         "tput": res.out_tokens / max(res.total_time, 1e-12),
-        "peak_running": ms["peak_running"],
-        "hit_tokens": ms.get("prefix_hit_tokens", 0),
-        "preemptions": ms["num_preemptions"],
-        "restores": ms["num_restores"],
+        "peak_running": snap["engine.peak_running"],
+        "hit_tokens": snap.get("prefixcache.hit_tokens", 0),
+        "preemptions": snap["mem.preemptions"],
+        "restores": snap["mem.restores"],
         "streams": {
             r.rid: list(r.committed)
             for r in engine.finished if r.sampling.is_deterministic

@@ -41,6 +41,8 @@ commit bitwise-identical streams.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from repro.core.determinism import Mode, REORDER_ONLY_POLICY
 from repro.serving.costmodel import flatten_events
@@ -62,6 +64,28 @@ def _mixed_requests(cfg, n, max_new, out_lens=None):
     for i, r in enumerate(reqs):
         r.sampling.is_deterministic = i % 2 == 0  # exact 50/50 mix
     return reqs
+
+
+def write_trace(path: str, n: int = 6) -> None:
+    """Run one traced overlap scenario and export its Chrome/Perfetto
+    trace-event JSON (schema-validated) — the CI bench artifact that lets
+    anyone load a real mixed-batch schedule into ui.perfetto.dev."""
+    from repro.obs import validate_chrome_trace
+
+    cfg, params = bench_model()
+    reqs = _mixed_requests(cfg, n, 24)
+    r = run_scenario(cfg, params, reqs, mode=Mode.LLM42, window=8, group=4,
+                     scheduler=OverlapPolicy(), policy=REORDER_ONLY_POLICY,
+                     trace=True)
+    trace = r["engine"].obs.tracer.to_chrome_trace()
+    errors = validate_chrome_trace(trace)
+    assert not errors, f"trace failed schema validation: {errors[:5]}"
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    print(f"# wrote {path} ({len(trace['traceEvents'])} trace events)")
 
 
 def run(n: int = 8):
@@ -124,9 +148,14 @@ def main() -> None:
                     help="reduced workload for CI")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as JSON (CI artifact)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also export a Chrome/Perfetto trace of one traced"
+                         " overlap scenario (CI artifact)")
     args = ap.parse_args()
     rows = run(n=6) if args.smoke else run()
     emit(rows, "name,us_per_call,derived", json_path=args.json)
+    if args.trace_out:
+        write_trace(args.trace_out, n=6 if args.smoke else 8)
 
 
 if __name__ == "__main__":

@@ -7,10 +7,18 @@ next to the code that produced it, and CI uploads the regenerated files as
 artifacts for side-by-side comparison.
 
     python benchmarks/persist.py            # writes BENCH_{overlap,pipeline,cache,prefill}.json
-    python benchmarks/persist.py --check    # regenerate to temp, diff row keys only
+    python benchmarks/persist.py --check    # regenerate to temp, compare per metric
 
-``--check`` verifies the committed files are structurally current (same
-benchmark names and row schema) without failing on timing jitter.
+``--check`` regenerates each benchmark and compares it against the
+committed file **per metric**, with a tolerance class picked from the
+metric's name: CPU wall-time columns get a very loose relative tolerance
+(CI machines differ wildly), ratios/rates/occupancies a small absolute
+tolerance, simulated timings/throughputs a moderate relative tolerance,
+and discrete counts a moderate relative + small absolute slack.  It
+prints a pass/fail table (also appended to ``$GITHUB_STEP_SUMMARY`` as
+markdown when set) and exits non-zero on any out-of-tolerance metric or
+schema drift; the CI job marks the step non-blocking, so the table is a
+trajectory signal, not a gate.
 """
 
 from __future__ import annotations
@@ -53,12 +61,107 @@ def _schema(path: Path) -> dict:
     }
 
 
+def _rows(path: Path) -> dict:
+    """Row dicts keyed on the metric name column."""
+    return {
+        str(r.get("name", r.get("mode", "?"))): r
+        for r in json.loads(path.read_text())
+    }
+
+
+def tolerance(metric: str, column: str):
+    """(kind, bound) for one metric cell — the comparison contract.
+
+    * ``us_per_call`` (and any ``wall`` column/metric) is measured CPU
+      wall time: rel tol 2.0 (within 3x) — it exists to catch order-of-
+      magnitude regressions, not jitter.
+    * ratios / rates / occupancies are dimensionless and O(1): abs 0.15.
+    * simulated timings (``_ms``) and throughputs (``tput``): rel 0.5 —
+      the cost model is deterministic, but schedule changes move these
+      legitimately between commits.
+    * everything else (verify passes, peak depth/concurrency, preemption
+      and restore counts, hit tokens): rel 0.5 with +/-2 absolute slack
+      so tiny counts don't trip the relative bound.
+    """
+    name = metric.lower()
+    if column == "us_per_call" or "wall" in name or "wall" in column:
+        return ("rel", 2.0)
+    if any(k in name for k in ("ratio", "rate", "occupancy", "vs_")):
+        return ("abs", 0.15)
+    if any(k in name for k in ("_ms", "tput", "hbm", "_s")):
+        return ("rel", 0.5)
+    return ("relabs", (0.5, 2.0))
+
+
+def _within(kind, bound, committed: float, fresh: float) -> bool:
+    diff = abs(fresh - committed)
+    if kind == "abs":
+        return diff <= bound
+    if kind == "rel":
+        return diff <= bound * max(abs(committed), 1e-9)
+    rel, slack = bound  # "relabs"
+    return diff <= max(rel * abs(committed), slack)
+
+
+def compare_rows(committed: dict, fresh: dict, bench: str) -> list:
+    """Per-metric comparison table rows:
+    ``(bench, metric, column, committed, fresh, bound, ok)``."""
+    table = []
+    for metric in sorted(set(committed) | set(fresh)):
+        c_row, f_row = committed.get(metric), fresh.get(metric)
+        if c_row is None or f_row is None:
+            which = "committed" if c_row is None else "fresh"
+            table.append((bench, metric, "-", "-", "-",
+                          f"missing from {which}", False))
+            continue
+        for col in sorted(set(c_row) | set(f_row)):
+            if col in ("name", "mode"):
+                continue
+            cv, fv = c_row.get(col, ""), f_row.get(col, "")
+            if not isinstance(cv, (int, float)) or isinstance(cv, bool) or (
+                not isinstance(fv, (int, float)) or isinstance(fv, bool)
+            ):
+                if cv != fv:  # non-numeric cells must match exactly
+                    table.append((bench, metric, col, cv, fv, "exact", False))
+                continue
+            kind, bound = tolerance(metric, col)
+            ok = _within(kind, bound, float(cv), float(fv))
+            table.append((bench, metric, col, cv, fv,
+                          f"{kind} {bound}", ok))
+    return table
+
+
+def print_table(table: list) -> None:
+    header = ("bench", "metric", "col", "committed", "fresh", "tol", "ok")
+    lines = [header] + [
+        (b, m, c, str(cv), str(fv), tol, "PASS" if ok else "FAIL")
+        for b, m, c, cv, fv, tol, ok in table
+    ]
+    widths = [max(len(str(row[i])) for row in lines) for i in range(7)]
+    for row in lines:
+        print("  ".join(str(row[i]).ljust(widths[i]) for i in range(7)))
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        n_fail = sum(1 for r in table if not r[6])
+        with open(summary, "a") as f:
+            f.write("\n### Benchmark trajectory vs committed BENCH_*.json\n\n")
+            f.write(f"{len(table) - n_fail}/{len(table)} metrics within "
+                    f"tolerance\n\n")
+            f.write("| bench | metric | col | committed | fresh | tol | ok |\n")
+            f.write("|---|---|---|---|---|---|---|\n")
+            for b, m, c, cv, fv, tol, ok in table:
+                f.write(f"| {b} | {m} | {c} | {cv} | {fv} | {tol} | "
+                        f"{'✅' if ok else '❌'} |\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--check",
         action="store_true",
-        help="regenerate to temp and compare row schema against committed files",
+        help="regenerate to temp and compare per metric against committed "
+             "files (tolerance classes by metric name)",
     )
     ap.add_argument(
         "--only", choices=sorted(BENCHES), nargs="+", default=None,
@@ -68,6 +171,7 @@ def main(argv=None) -> int:
     names = args.only or sorted(BENCHES)
 
     failures = []
+    table = []
     for name in names:
         committed = REPO / f"BENCH_{name}.json"
         if args.check:
@@ -77,16 +181,19 @@ def main(argv=None) -> int:
                 if not committed.exists():
                     failures.append(f"{committed.name} missing — run persist.py")
                     continue
-                want, got = _schema(fresh), _schema(committed)
-                if want != got:
-                    failures.append(
-                        f"{committed.name} schema drift: committed {got} "
-                        f"vs fresh {want} — rerun persist.py"
-                    )
+                rows = compare_rows(_rows(committed), _rows(fresh), name)
+                table.extend(rows)
+                failures.extend(
+                    f"{committed.name}: {m} [{c}] committed={cv} fresh={fv} "
+                    f"(tol {tol}) — rerun persist.py if intentional"
+                    for _, m, c, cv, fv, tol, ok in rows if not ok
+                )
         else:
             run_bench(BENCHES[name], committed)
             print(f"[persist] wrote {committed.name}: {_schema(committed)}")
 
+    if table:
+        print_table(table)
     for f in failures:
         print(f"[persist] FAIL: {f}")
     return 1 if failures else 0

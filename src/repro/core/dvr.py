@@ -125,13 +125,17 @@ def build_verify_row(
 
 def apply_verify_result(
     req: Request, n_match: int, commit_tok: int, window: int = 0
-) -> None:
+) -> Tuple[int, int]:
     """Commit matching prefix + the verifier token; roll back the rest.
 
     The synchronous (pause-style) path: the row was conditioned on
     ``committed[-1]``, which requires an empty in-flight FIFO — a request
     with outstanding windows must drain them (``core.pipeline``) before it
-    can be verified synchronously."""
+    can be verified synchronously.
+
+    Returns ``(n_committed, n_rejected)``: tokens actually appended to the
+    committed stream (AFTER the budget clamp — what the audit log must
+    cover) and candidates rolled back."""
     assert not req.pipeline, "sync verify requires an empty in-flight FIFO"
     cand_len = len(req.candidates)
     _update_acceptance(req, n_match, cand_len)
@@ -139,6 +143,7 @@ def apply_verify_result(
     accepted = req.candidates[:n_match]
     rejected = cand_len - n_match
 
+    base = len(req.committed)
     req.committed.extend(accepted)
     req.committed.append(int(commit_tok))
     req.candidates = []
@@ -152,6 +157,7 @@ def apply_verify_result(
         req.state = State.RUNNING  # verdict landed: no longer gated on verify
         if window:  # unless the budget is still covered by leftover cands
             mark_window_state(req, window)
+    return len(req.committed) - base, rejected
 
 
 def _clamp_budget(req: Request) -> None:

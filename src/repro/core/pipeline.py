@@ -90,6 +90,17 @@ class SpliceOutcome:
     #: chained start state (one token earlier), which is only right for a
     #: successor launched behind an in-flight window.
     reanchor: bool = False
+    #: committed-stream extent of this splice AFTER the budget clamp:
+    #: ``req.committed[committed_base : committed_base + committed_count]``
+    #: are exactly the tokens this splice committed — the audit log's
+    #: per-token provenance slice (the clamp may truncate the nominal
+    #: matched-prefix + commit-token extension, so record counts must come
+    #: from here, not from ``n_match``)
+    committed_base: int = 0
+    committed_count: int = 0
+    #: speculated tokens this splice rejected (in-window rollback plus the
+    #: cascaded windows' and fresh tail's candidates)
+    rejected: int = 0
 
 
 def submit_window(
@@ -111,6 +122,7 @@ def submit_window(
         ready_at=ready_at,
         cond_tok=conditioning_token(req),
         ring_idx=ring_idx,
+        seq=req.window_seq,
     )
     req.candidates = req.candidates[k:]
     req.pipeline.append(fl)
@@ -155,6 +167,7 @@ def splice_front(req: Request, window: int = 0) -> SpliceOutcome:
     n = min(fl.n_match, k)
     rejected = k - n
 
+    committed_base = len(req.committed)
     req.committed.extend(fl.cands[:n])
     req.committed.append(int(fl.commit_tok))
     req.num_verify_passes += 1
@@ -171,6 +184,8 @@ def splice_front(req: Request, window: int = 0) -> SpliceOutcome:
             succ = req.pipeline[0]
             if succ.cands and int(succ.cands[0]) == ct:
                 succ.cands.pop(0)
+                if succ.margins:  # keep margins parallel to cands+commit
+                    succ.margins.pop(0)
                 # the successor's replay re-predicted this position from the
                 # same context the commit token came from; the fixed-shape
                 # fixed-schedule replay is batch-invariant, so it matched
@@ -217,4 +232,7 @@ def splice_front(req: Request, window: int = 0) -> SpliceOutcome:
         cascaded=cascaded,
         restore_state=not chain or not (req.pipeline or req.candidates),
         reanchor=not req.pipeline,
+        committed_base=committed_base,
+        committed_count=len(req.committed) - committed_base,
+        rejected=rejected,
     )

@@ -12,6 +12,7 @@ recomputation statistics.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -118,6 +119,21 @@ def main() -> None:
                          " their longest committed-prefix match to shared"
                          " read-only KV blocks and prefill only the tail")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Chrome/Perfetto trace-event JSON of the"
+                         " run (per-request lifecycle spans + main/verify"
+                         " stream pass slices; load in ui.perfetto.dev or"
+                         " chrome://tracing)")
+    ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
+                    help="print a metrics-snapshot line every N engine"
+                         " iterations (0 = only the final summary)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the final metrics-registry snapshot as JSON")
+    ap.add_argument("--audit-out", default=None, metavar="PATH",
+                    help="write the per-committed-token determinism audit"
+                         " log as JSONL (one provenance record per token:"
+                         " committing schedule, verify window, n_match,"
+                         " top-1/top-2 logit margin)")
     args = ap.parse_args()
 
     cfg = config_registry.get_smoke_config(args.arch)
@@ -142,13 +158,30 @@ def main() -> None:
         block_size=args.block_size,
         num_blocks=args.num_blocks,
         prefix_cache=(args.prefix_cache == "on"),
+        trace=args.trace_out is not None,
+        audit=args.audit_out is not None,
     )
     reqs = build_requests(cfg, args.requests, args.det_ratio, args.max_new,
                           args.seed, args.workload)
     for r in reqs:
         engine.submit(r)
     t0 = time.time()
-    done = engine.run()
+    if args.metrics_interval > 0:
+        done = None
+        for it in range(1, 100001):
+            if not engine.step():
+                done = engine.finished
+                break
+            if it % args.metrics_interval == 0:
+                snap = engine.obs.metrics.snapshot()
+                print(f"[iter {it}] committed={snap['tokens.committed']} "
+                      f"running={snap['engine.running']} "
+                      f"queued={snap['engine.queued']} "
+                      f"rollbacks={snap['verify.rollbacks']} "
+                      f"verify_inflight={snap['verify.inflight']}")
+        assert done is not None, "engine did not drain"
+    else:
+        done = engine.run()
     wall = time.time() - t0
 
     out_tokens = sum(r.num_output for r in done)
@@ -201,6 +234,29 @@ def main() -> None:
         print(f"stream clocks: main {rt.main.now * 1e3:.1f} ms, "
               f"verify backlog {rt.verify_backlog * 1e3:.2f} ms, "
               f"makespan {rt.makespan * 1e3:.1f} ms")
+
+    if args.trace_out:
+        from repro.obs import validate_chrome_trace
+
+        trace = engine.obs.tracer.to_chrome_trace()
+        errors = validate_chrome_trace(trace)
+        assert not errors, f"trace failed schema validation: {errors[:5]}"
+        with open(args.trace_out, "w") as f:
+            json.dump(trace, f)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace_out}"
+              f" (load in ui.perfetto.dev)")
+    if args.metrics_out:
+        engine.obs.metrics.dump(args.metrics_out)
+        print(f"metrics: {len(engine.obs.metrics.snapshot())} series "
+              f"-> {args.metrics_out}")
+    if args.audit_out:
+        audit = engine.obs.audit
+        errors = audit.coverage_errors(done)
+        assert not errors, f"audit coverage check failed: {errors[:5]}"
+        audit.to_jsonl(args.audit_out)
+        print(f"audit: {len(audit.records)} provenance records "
+              f"({len(done)} requests, every committed token covered) "
+              f"-> {args.audit_out}")
 
 
 if __name__ == "__main__":

@@ -290,6 +290,9 @@ class BlockAllocator:
         self.refs: List[int] = [0] * num_blocks
         self.cached: Set[int] = set()
         self.peak_in_use = 0
+        # allocation-churn telemetry (obs.metrics gauges)
+        self.num_allocs = 0
+        self.num_frees = 0
 
     def num_free(self) -> int:
         return len(self._free)
@@ -311,6 +314,7 @@ class BlockAllocator:
         bid = self._free.pop()
         assert self.refs[bid] == 0 and bid not in self.cached
         self.refs[bid] = 1
+        self.num_allocs += 1
         self.peak_in_use = max(self.peak_in_use, self.in_use())
         return bid
 
@@ -325,4 +329,5 @@ class BlockAllocator:
     def release(self, bid: int) -> None:
         """Return a zero-ref, uncached block to the free list."""
         assert self.refs[bid] == 0 and bid not in self.cached
+        self.num_frees += 1
         self._free.append(bid)

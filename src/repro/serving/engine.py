@@ -76,11 +76,12 @@ from repro.core.verifier import make_verify_body, make_verify_fn
 from repro.models.base import ModelConfig
 from repro.models.layers import PagedView
 from repro.models.transformer import build_cross_cache, forward
+from repro.obs import Observability, TokenProvenance
 from repro.serving import costmodel, kv_cache, prefixcache, statepool, streams
 from repro.serving import blockpool
 from repro.serving import scheduler as sched
 from repro.serving.request import Request, State
-from repro.serving.sampler import sample_batch, sample_token
+from repro.serving.sampler import sample_batch, sample_token, top2_margin
 
 
 def _bucket(n: int) -> int:
@@ -114,6 +115,8 @@ class Engine:
         prefix_cache: bool = True,  # share committed-prefix KV blocks
         mem_policy: Optional[sched.BlockMemoryPolicy] = None,
         paged_attention: bool = True,  # in-place paged forward + fused step
+        trace: bool = False,  # dual-stream request tracing (repro.obs.trace)
+        audit: bool = False,  # per-token determinism audit (repro.obs.audit)
     ):
         self.cfg = cfg
         self.params = params
@@ -202,6 +205,12 @@ class Engine:
         self.num_restores = 0
         self.restored_tokens = 0
         self.peak_running = 0
+        # unified observability (repro.obs): metrics registry (always on),
+        # tracer and audit log (Null twins unless asked for).  Host-side
+        # bookkeeping over values the engine computes anyway — committed
+        # streams are bitwise identical with recording on or off.
+        self.obs = Observability(trace=trace, audit=audit)
+        self._register_metrics()
 
     # ------------------------------------------------------------------
     # stream clocks
@@ -237,6 +246,231 @@ class Engine:
             latency=(self.verify_latency_ms or 0.0) / 1e3,
             contention=hw.stream_contention,
         )
+
+    # ------------------------------------------------------------------
+    # observability (repro.obs)
+    # ------------------------------------------------------------------
+
+    def _register_metrics(self) -> None:
+        """Register every engine series with the metrics registry.  Pull
+        gauges close over ``self`` attribute lookups — never over the
+        objects themselves (``bind_cost_model`` replaces ``self.runtime``
+        wholesale)."""
+        m = self.obs.metrics
+        self._c_iters = m.counter(
+            "engine.iterations", unit="iterations",
+            help="scheduler iterations stepped")
+        self._c_submitted = m.counter(
+            "engine.requests_submitted", unit="requests",
+            help="requests submitted to the engine")
+        self._c_finished = m.counter(
+            "engine.requests_finished", unit="requests",
+            help="requests retired")
+        self._c_fused = m.counter(
+            "engine.fused_steps", unit="launches",
+            help="iterations whose whole device side ran as one fused "
+                 "mixed-batch launch")
+        m.gauge_fn("engine.running", lambda: len(self.running),
+                   unit="requests", help="requests in the running set")
+        m.gauge_fn("engine.queued", lambda: len(self.queue),
+                   unit="requests", help="requests awaiting admission")
+        m.gauge_fn("engine.preempted", lambda: len(self.preempted),
+                   unit="requests", help="requests evicted, restore pending")
+        m.gauge_fn("engine.peak_running", lambda: self.peak_running,
+                   unit="requests", help="peak concurrent running requests")
+        self._c_committed = m.counter(
+            "tokens.committed", unit="tokens",
+            help="tokens committed across all requests (prefill T0 + "
+                 "direct decode commits + verify splices)")
+        self._c_recomputed = m.counter(
+            "tokens.recomputed", unit="tokens",
+            help="speculated tokens rejected by verification (rollback "
+                 "recompute cost)")
+        self._c_windows = m.counter(
+            "verify.windows_submitted", unit="windows",
+            help="verify windows moved into in-flight FIFOs (deferred path)")
+        self._c_passes = m.counter(
+            "verify.passes", unit="verdicts",
+            help="verify verdicts applied (sync passes + pipelined splices)")
+        self._c_rollbacks = m.counter(
+            "verify.rollbacks", unit="rollbacks",
+            help="verdicts that rejected at least one speculated token")
+        self._c_cascaded = m.counter(
+            "verify.cascaded_windows", unit="windows",
+            help="in-flight windows discarded by cascade invalidation")
+        self._h_rollback_depth = m.histogram(
+            "verify.rollback_depth", unit="tokens",
+            help="tokens rejected per rolling-back verdict (in-window + "
+                 "cascaded + fresh tail)")
+        self._h_acceptance = m.histogram(
+            "verify.acceptance_ema", unit="fraction",
+            help="per-request acceptance EMA at retirement (det requests)")
+        m.gauge_fn("verify.inflight",
+                   lambda: sum(len(r.pipeline) for r in self.running),
+                   unit="windows", help="verify windows currently in flight")
+        # dual-clock stream telemetry (serving.streams)
+        m.gauge_fn("streams.main_busy", lambda: self.runtime.main.busy,
+                   unit="s", help="main-stream busy time (costed clock)")
+        m.gauge_fn("streams.verify_busy", lambda: self.runtime.verify.busy,
+                   unit="s", help="verify-stream busy time (costed clock)")
+        m.gauge_fn("streams.makespan", lambda: self.runtime.makespan,
+                   unit="s", help="completion time of all scheduled work")
+        m.gauge_fn("streams.verify_backlog",
+                   lambda: self.runtime.verify_backlog,
+                   unit="s", help="verify-stream work scheduled past now")
+        m.gauge_fn("streams.outstanding_verdicts",
+                   lambda: self.runtime.outstanding_verdicts,
+                   unit="verdicts", help="verdicts launched but not yet due")
+        m.gauge_fn("streams.peak_outstanding",
+                   lambda: self.runtime.peak_outstanding,
+                   unit="verdicts", help="deepest verdict queue seen")
+        # memory subsystem: block pool, preemption lane, prefix cache
+        m.gauge_fn("mem.preemptions", lambda: self.num_preemptions,
+                   unit="preemptions", help="requests evicted under pressure")
+        m.gauge_fn("mem.restores", lambda: self.num_restores,
+                   unit="restores", help="preempted requests re-admitted")
+        m.gauge_fn("mem.restored_tokens", lambda: self.restored_tokens,
+                   unit="tokens", help="positions replayed by restores")
+        m.gauge_fn("blockpool.block_size", lambda: self.pool.block_size,
+                   unit="tokens", help="KV positions per block")
+        m.gauge_fn("blockpool.num_blocks",
+                   lambda: self.pool.alloc_blocks.num_blocks,
+                   unit="blocks", help="total pool blocks")
+        m.gauge_fn("blockpool.blocks_in_use",
+                   lambda: self.pool.alloc_blocks.in_use(),
+                   unit="blocks", help="blocks currently referenced")
+        m.gauge_fn("blockpool.peak_blocks_in_use",
+                   lambda: self.pool.alloc_blocks.peak_in_use,
+                   unit="blocks", help="peak referenced blocks")
+        m.gauge_fn("blockpool.free_blocks",
+                   lambda: self.pool.alloc_blocks.num_free(),
+                   unit="blocks", help="immediately free blocks")
+        m.gauge_fn("blockpool.allocs",
+                   lambda: getattr(self.pool.alloc_blocks, "num_allocs", 0),
+                   unit="blocks", help="block allocations served")
+        m.gauge_fn("blockpool.frees",
+                   lambda: getattr(self.pool.alloc_blocks, "num_frees", 0),
+                   unit="blocks", help="blocks returned to the free list")
+        m.gauge_fn("blockpool.paged", lambda: int(self.pool.paged),
+                   help="1 when full-attention KV is paged")
+        if self.prefix_cache is not None:
+            def _pc(key: str):
+                return lambda: self.prefix_cache.stats()[key]
+            m.gauge_fn("prefixcache.hits", _pc("prefix_hits"),
+                       unit="lookups", help="admissions matching >= 1 block")
+            m.gauge_fn("prefixcache.misses", _pc("prefix_misses"),
+                       unit="lookups", help="admissions matching 0 blocks")
+            m.gauge_fn("prefixcache.hit_tokens", _pc("prefix_hit_tokens"),
+                       unit="tokens", help="prompt tokens served from cache")
+            m.gauge_fn("prefixcache.insertions", _pc("prefix_insertions"),
+                       unit="blocks", help="blocks registered with the radix")
+            m.gauge_fn("prefixcache.evictions", _pc("prefix_evictions"),
+                       unit="blocks", help="cached blocks reclaimed LRU")
+            m.gauge_fn("prefixcache.size_blocks", _pc("prefix_size_blocks"),
+                       unit="blocks", help="blocks resident in the cache")
+            m.gauge_fn(
+                "prefixcache.hit_rate",
+                lambda: (lambda s: s["prefix_hits"]
+                         / max(s["prefix_hits"] + s["prefix_misses"], 1))(
+                    self.prefix_cache.stats()),
+                unit="fraction", help="lookup hit rate")
+        if hasattr(self.scheduler, "num_demotions"):
+            m.gauge_fn("scheduler.demotions",
+                       lambda: self.scheduler.num_demotions,
+                       unit="transitions",
+                       help="adaptive demotions to sync verification")
+            m.gauge_fn("scheduler.promotions",
+                       lambda: self.scheduler.num_promotions,
+                       unit="transitions",
+                       help="adaptive promotions back to overlap")
+        self._h_ttft = m.histogram(
+            "latency.ttft", unit="s",
+            help="submit to first committed token (stream clock)")
+        self._h_tpot = m.histogram(
+            "latency.tpot", unit="s",
+            help="mean inter-token time past T0 (stream clock)")
+        self._h_e2e = m.histogram(
+            "latency.e2e", unit="s",
+            help="submit to retirement (stream clock)")
+
+    def _charge_main(self, ev: Dict[str, Any]) -> None:
+        """Charge one main-stream pass AND record its trace slice (the
+        runtime stashes the launch's (start, finish) in
+        ``last_main_span``; None under the logical clock — the tracer
+        lays those out across the iteration window)."""
+        self.runtime.charge(ev)
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.pass_span("main", ev["kind"], self.runtime.last_main_span,
+                         self._trace_args(ev))
+
+    @staticmethod
+    def _trace_args(ev: Dict[str, Any]) -> Dict[str, Any]:
+        """Scalar-only view of an engine event for trace-slice args."""
+        return {
+            k: (list(v) if k == "rids" else v)
+            for k, v in ev.items()
+            if k not in ("wall",)
+            and isinstance(v, (int, float, str, bool, list, tuple))
+        }
+
+    def _note_t0(self, req: Request, margin: Optional[float] = None) -> None:
+        """Metrics + audit for the T0 token a prefill pass just committed
+        (sampled under the fixed verify-grade schedule in every mode —
+        deterministic by construction, window -1)."""
+        self._c_committed.inc()
+        if req.first_token_clock < 0:
+            req.first_token_clock = self.runtime.now
+        au = self.obs.audit
+        if au.enabled:
+            schedule = (
+                INVARIANT_SCHEDULE if self.mode == Mode.BATCH_INVARIANT
+                else VERIFY_SCHEDULE
+            )
+            au.record(TokenProvenance(
+                rid=req.rid, index=len(req.committed) - 1,
+                token=req.committed[-1], origin="prefill",
+                schedule=schedule, margin=margin,
+            ))
+
+    def _note_splice(self, req: Request, outcome: pipeline.SpliceOutcome,
+                     ) -> None:
+        """Metrics + trace + audit for one pipelined front splice."""
+        fl = outcome.record
+        self._c_passes.inc()
+        self._c_committed.inc(outcome.committed_count)
+        if outcome.rejected:
+            self._c_rollbacks.inc()
+            self._c_recomputed.inc(outcome.rejected)
+            self._h_rollback_depth.observe(outcome.rejected)
+        if outcome.cascaded:
+            self._c_cascaded.inc(len(outcome.cascaded))
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.instant(
+                "rollback" if outcome.rolled_back else "commit",
+                t=self.runtime.now, rid=req.rid, window=fl.seq,
+                n_match=fl.n_match, committed=outcome.committed_count,
+                rejected=outcome.rejected, cascaded=len(outcome.cascaded),
+            )
+        if req.first_token_clock < 0 and req.committed:
+            req.first_token_clock = self.runtime.now
+        au = self.obs.audit
+        if not au.enabled:
+            return
+        n = min(fl.n_match, len(fl.cands))
+        for j in range(outcome.committed_count):
+            idx = outcome.committed_base + j
+            au.record(TokenProvenance(
+                rid=req.rid, index=idx, token=req.committed[idx],
+                origin="verify", schedule=VERIFY_SCHEDULE,
+                window=fl.seq, occurrence=fl.ring_idx,
+                n_match=fl.n_match, accepted=j < n,
+                rollback=outcome.rolled_back,
+                cascaded=len(outcome.cascaded), shifted=fl.shifted,
+                margin=(fl.margins[j]
+                        if fl.margins and j < len(fl.margins) else None),
+            ))
 
     # ------------------------------------------------------------------
     # jitted step builders (cached per shape class)
@@ -276,11 +510,16 @@ class Engine:
                 tables=tables if paged else None, paged=pview,
             )
             nxt = sample_batch(logits[:, 0], seeds, out_pos, temps, top_ks)
+            # top-1/top-2 margin per row: audit provenance for directly
+            # committed fast-path tokens.  Computed unconditionally so the
+            # device program is identical with auditing on or off; host
+            # float conversion is gated instead.
+            margins = top2_margin(logits[:, 0])
             if paged:
                 pool2 = kv_cache.scatter_mixed(pool, lay, slots, new_cache)
             else:
                 pool2 = kv_cache.scatter(pool, lay, slots, tables, new_cache)
-            return pool2, nxt
+            return pool2, nxt, margins
 
         return step
 
@@ -325,12 +564,13 @@ class Engine:
                     last = plen - 1
                 tok = sample_token(logits[0, last], seed, jnp.int32(0), temp,
                                    top_k)
+                marg = top2_margin(logits[0, last])  # T0 audit provenance
                 if rec:  # bucket-pad positions must not advance O(1) state
                     new_cache = statepool.merge_rows(
                         new_cache, statepool.select_index(per_pos, last[None]),
                     )
                 pool2 = kv_cache.scatter(pool, lay, slots, table[None], new_cache)
-                return pool2, tok
+                return pool2, tok, marg
 
             self._fns[key] = step
         return self._fns[key]
@@ -434,23 +674,23 @@ class Engine:
             rec = self.has_recurrent_state
 
             def fused(params, pool, anchor, pargs, dargs, vargs_list):
-                logits_p = nxt = None
+                logits_p = nxt = dmarg = None
                 if pbody is not None:
                     pool, logits_p = pbody(params, pool, *pargs)
                 if dbody is not None:
-                    pool, nxt = dbody(params, pool, *dargs)
+                    pool, nxt, dmarg = dbody(params, pool, *dargs)
                 vouts = []
                 for vargs in vargs_list:
                     if rec:
                         (pool, anchor, commit_rows, n_match, commit_tok,
-                         _v) = vbody(params, pool, anchor, *vargs)
-                        vouts.append((commit_rows, n_match, commit_tok))
+                         _v, marg) = vbody(params, pool, anchor, *vargs)
+                        vouts.append((commit_rows, n_match, commit_tok, marg))
                     else:
-                        pool, n_match, commit_tok, _v = vbody(
+                        pool, n_match, commit_tok, _v, marg = vbody(
                             params, pool, *vargs
                         )
-                        vouts.append((None, n_match, commit_tok))
-                return pool, anchor, logits_p, nxt, vouts
+                        vouts.append((None, n_match, commit_tok, marg))
+                return pool, anchor, logits_p, nxt, dmarg, vouts
 
             self._fns[key] = jax.jit(fused)
         return self._fns[key]
@@ -462,7 +702,15 @@ class Engine:
     def submit(self, req: Request) -> None:
         self._check_capacity(req)
         req.state = State.QUEUED
+        req.submit_clock = self.runtime.now
         self.queue.append(req)
+        self._c_submitted.inc()
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.request_begin(req.rid, req.submit_clock)
+            tr.instant("submit", t=req.submit_clock, rid=req.rid,
+                       prompt_len=req.prompt_len,
+                       deterministic=req.sampling.is_deterministic)
 
     def _worst_need(self, req: Request) -> int:
         """Worst-case KV positions this request can ever occupy.
@@ -697,6 +945,10 @@ class Engine:
                 "kind": "cache_hit", "rid": req.rid, "tokens": cached,
                 "iter": self._now,
             })
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.instant("admit", t=self.runtime.now, rid=req.rid,
+                       cached_tokens=cached, slot=req.slot)
         if self._use_chunked(req) or cached > 0:
             # third lane: prefill advances chunk-by-chunk via scheduler
             # plans instead of one exclusive pass at admission; a cache
@@ -723,6 +975,7 @@ class Engine:
         about to evict the slot's KV and the restore replay rebuilds
         recurrent state from the committed stream."""
         for outcome in pipeline.apply_ready(req, self.window, float("inf")):
+            self._note_splice(req, outcome)
             self.statepool.note_splice(req.slot, len(outcome.cascaded))
         self.statepool.note_preempt(req.slot)
 
@@ -758,6 +1011,10 @@ class Engine:
             "kind": "preempt", "rid": req.rid, "iter": self._now,
             "dropped_tokens": dropped, "committed": len(req.committed),
         })
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.instant("preempt", t=self.runtime.now, rid=req.rid,
+                       dropped_tokens=dropped, committed=len(req.committed))
         return True
 
     def _restore(self, req: Request) -> None:
@@ -803,6 +1060,13 @@ class Engine:
             "replay_tokens": max(req.prefill_total - req.prefill_pos, 0),
             "rematched_blocks": len(matched),
         })
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.instant(
+                "restore", t=self.runtime.now, rid=req.rid,
+                replay_tokens=max(req.prefill_total - req.prefill_pos, 0),
+                rematched_blocks=len(matched),
+            )
         self.running.append(req)
         if req.prefill_pos >= req.prefill_total:
             # everything survived in the cache: nothing to recompute
@@ -835,27 +1099,36 @@ class Engine:
             "wall": wall, "iter": self._now, "cached": start,
             "replay": replay,
         }
-        self.runtime.charge(ev)
+        self._charge_main(ev)
         self.events.append(ev)
 
     def mem_stats(self) -> Dict[str, Any]:
-        """Serve-loop memory-subsystem telemetry: block-pool occupancy,
-        prefix-cache hit rates, preemption/restore counts."""
-        alloc = self.pool.alloc_blocks
+        """Legacy memory-telemetry view — now a thin compat shim over the
+        metrics registry's ``snapshot()`` (the single source of truth).
+        New consumers should read ``engine.obs.metrics.snapshot()``
+        directly; the namespaced keys carry the same values."""
+        snap = self.obs.metrics.snapshot()
         out: Dict[str, Any] = {
-            "block_size": self.pool.block_size,
-            "num_blocks": alloc.num_blocks,
-            "blocks_in_use": alloc.in_use(),
-            "peak_blocks_in_use": alloc.peak_in_use,
-            "free_blocks": alloc.num_free(),
-            "num_preemptions": self.num_preemptions,
-            "num_restores": self.num_restores,
-            "restored_tokens": self.restored_tokens,
-            "peak_running": self.peak_running,
-            "paged": self.pool.paged,
+            "block_size": snap["blockpool.block_size"],
+            "num_blocks": snap["blockpool.num_blocks"],
+            "blocks_in_use": snap["blockpool.blocks_in_use"],
+            "peak_blocks_in_use": snap["blockpool.peak_blocks_in_use"],
+            "free_blocks": snap["blockpool.free_blocks"],
+            "num_preemptions": snap["mem.preemptions"],
+            "num_restores": snap["mem.restores"],
+            "restored_tokens": snap["mem.restored_tokens"],
+            "peak_running": snap["engine.peak_running"],
+            "paged": bool(snap["blockpool.paged"]),
         }
         if self.prefix_cache is not None:
-            out.update(self.prefix_cache.stats())
+            out.update({
+                "prefix_hits": snap["prefixcache.hits"],
+                "prefix_misses": snap["prefixcache.misses"],
+                "prefix_hit_tokens": snap["prefixcache.hit_tokens"],
+                "prefix_insertions": snap["prefixcache.insertions"],
+                "prefix_evictions": snap["prefixcache.evictions"],
+                "prefix_size_blocks": snap["prefixcache.size_blocks"],
+            })
         return out
 
     def _build_cross(self, req: Request) -> None:
@@ -931,6 +1204,10 @@ class Engine:
                 jnp.int32(req.sampling.top_k),
             )
             req.committed.append(int(tok))  # T0: deterministic by construction
+            self._note_t0(req, (
+                float(top2_margin(logits[0, last_rel]))
+                if self.obs.audit.enabled else None
+            ))
         # commit point == post-stream state: the verify replay anchor (on a
         # replay, the state after committed[:-1] — exactly what the next
         # anchored window starts from)
@@ -1019,7 +1296,7 @@ class Engine:
             )
         table = self.pool.table_array([req.blocks])[0]
         t0 = time.perf_counter()
-        self.pool.data, tok = self._prefill_fn(P)(
+        self.pool.data, tok, marg = self._prefill_fn(P)(
             self.params, self.pool.data, jnp.int32(req.slot), table, tokens,
             jnp.int32(req.prompt_len), jnp.int32(req.sampling.seed),
             jnp.float32(req.sampling.temperature),
@@ -1030,13 +1307,14 @@ class Engine:
         # commit point == post-prompt state: first verify replay anchor
         self.statepool.set_commit_point(self.pool.data, req.slot)
         req.committed.append(int(tok))  # T0: deterministic by construction
+        self._note_t0(req, float(marg) if self.obs.audit.enabled else None)
         req.prefill_time = self._now
         self._insert_prompt_blocks(req)
         ev = {
             "kind": "prefill", "tokens": req.prompt_len + (cfg.num_prefix_embeds or 0),
             "padded": P + (cfg.num_prefix_embeds or 0), "wall": wall, "iter": self._now,
         }
-        self.runtime.charge(ev)
+        self._charge_main(ev)
         self.events.append(ev)
 
     def _prefill_sliding(self, req: Request) -> None:
@@ -1054,7 +1332,7 @@ class Engine:
             "padded": ((req.prompt_len + W - 1) // W) * W, "wall": wall,
             "iter": self._now,
         }
-        self.runtime.charge(ev)
+        self._charge_main(ev)
         self.events.append(ev)
 
     def _view(self, stalled: Optional[Set[int]] = None) -> sched.SchedulerView:
@@ -1125,18 +1403,33 @@ class Engine:
 
     def _decode_post(
         self, batch: List[Request], schedule: Schedule, pos: List[int],
-        nxt, wall: float,
+        nxt, wall: float, margins=None,
     ) -> Dict[str, Any]:
         """Land one decode pass's tokens: fresh candidates for det
-        requests (plus window-state marking), committed tokens otherwise."""
+        requests (plus window-state marking), committed tokens otherwise.
+        Directly committed tokens get a decode-origin audit record carrying
+        the fast-path schedule that produced them (``margins`` is the
+        pass's per-row top-1/top-2 margin output; host conversion is gated
+        on auditing)."""
         B = len(batch)
         nxt = [int(t) for t in nxt]
-        for r, t in zip(batch, nxt):
+        au = self.obs.audit
+        for i, (r, t) in enumerate(zip(batch, nxt)):
             if self.mode == Mode.LLM42 and r.sampling.is_deterministic:
                 r.candidates.append(t)
                 dvr.mark_window_state(r, self.window)
             else:
                 r.committed.append(t)
+                self._c_committed.inc()
+                if r.first_token_clock < 0:
+                    r.first_token_clock = self.runtime.now
+                if au.enabled:
+                    au.record(TokenProvenance(
+                        rid=r.rid, index=len(r.committed) - 1, token=t,
+                        origin="decode", schedule=schedule,
+                        margin=(float(margins[i])
+                                if margins is not None else None),
+                    ))
         return {
             "kind": "decode", "batch": B, "schedule": tuple(schedule),
             "ctx_sum": sum(pos) + B, "wall": wall, "iter": self._now,
@@ -1148,11 +1441,11 @@ class Engine:
         schedule = self._decode_schedule(B)
         args, pos = self._decode_prep(batch)
         t0 = time.perf_counter()
-        self.pool.data, nxt = self._decode_fn(B, schedule)(
+        self.pool.data, nxt, margins = self._decode_fn(B, schedule)(
             self.params, self.pool.data, *args
         )
         wall = time.perf_counter() - t0
-        return self._decode_post(batch, schedule, pos, nxt, wall)
+        return self._decode_post(batch, schedule, pos, nxt, wall, margins)
 
     def _pad_verify_row(self, inputs, cands, cand_lens, starts, bases, slots,
                         seeds, temps, tks, ring_idxs, table_rows) -> None:
@@ -1252,7 +1545,7 @@ class Engine:
 
     def _verify_postlaunch(
         self, rows: List[Request], fls, ev: Dict[str, Any], ring_idxs,
-        slots, starts, n_match, commit_tok, commit_rows,
+        slots, starts, n_match, commit_tok, commit_rows, margins=None,
     ) -> None:
         """Land the host side of one deferred verify pass: stream-clock
         launch, state-pool checkpoints, verdict payloads into the
@@ -1264,6 +1557,12 @@ class Engine:
         W = self.window
         ready_at = self.runtime.launch_verify(ev, sync=False)
         submitted_at = self.runtime.now
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.pass_span("verify", "verify", self.runtime.last_verify_span,
+                         self._trace_args(ev))
+        self._c_windows.inc(len(rows))
+        audit = self.obs.audit.enabled
         if commit_rows is not None:
             self.statepool.checkpoint(ring_idxs, slots, commit_rows)
         n_match = [int(n) for n in n_match]
@@ -1272,6 +1571,14 @@ class Engine:
             fl = fls[i]
             fl.submitted_at, fl.ready_at = submitted_at, ready_at
             fl.n_match, fl.commit_tok = n_match[i], commit_tok[i]
+            if audit and margins is not None:
+                # window-position margins, parallel to cands + commit token
+                # (front normalization pops both in lockstep)
+                fl.margins = [float(x) for x in margins[i]]
+            if tr.enabled:
+                tr.instant("verify_submit", t=submitted_at, rid=r.rid,
+                           window=fl.seq, cands=len(fl.cands),
+                           ready_at=ready_at)
             self.statepool.note_submit(r.slot, starts[i] + W)
             if r.state is not State.FINISHED:
                 r.state = (
@@ -1333,19 +1640,19 @@ class Engine:
             t0 = time.perf_counter()
             if self.has_recurrent_state:
                 (self.pool.data, self.statepool.anchor, commit_rows, n_match,
-                 commit_tok, _v) = self._verify_fn(
+                 commit_tok, _v, margins) = self._verify_fn(
                     self.params, self.pool.data, self.statepool.anchor, *args
                 )
             else:
                 commit_rows = None
-                self.pool.data, n_match, commit_tok, _v = self._verify_fn(
-                    self.params, self.pool.data, *args
+                self.pool.data, n_match, commit_tok, _v, margins = (
+                    self._verify_fn(self.params, self.pool.data, *args)
                 )
             wall = time.perf_counter() - t0
             ev = self._verify_event(rows, starts, n_pad, wall, n_decodable,
                                     True)
             self._verify_postlaunch(rows, fls, ev, ring_idxs, slots, starts,
-                                    n_match, commit_tok, commit_rows)
+                                    n_match, commit_tok, commit_rows, margins)
             return ev
         # ---- sync path: FIFOs are empty, the verdict applies on the spot
         assert len({id(r) for r in rows}) == len(rows), (
@@ -1388,13 +1695,13 @@ class Engine:
         )
         if self.has_recurrent_state:
             (self.pool.data, self.statepool.anchor, commit_rows, n_match,
-             commit_tok, _v) = self._verify_fn(
+             commit_tok, _v, margins) = self._verify_fn(
                 self.params, self.pool.data, self.statepool.anchor, *args
             )
             self.statepool.checkpoint(ring_idxs, slots, commit_rows)
         else:
-            self.pool.data, n_match, commit_tok, _v = self._verify_fn(
-                self.params, self.pool.data, *args
+            self.pool.data, n_match, commit_tok, _v, margins = (
+                self._verify_fn(self.params, self.pool.data, *args)
             )
         wall = time.perf_counter() - t0
         n_match = [int(n) for n in n_match]
@@ -1402,8 +1709,41 @@ class Engine:
         ev = self._verify_event(rows, starts, n_pad, wall, n_decodable,
                                 False)
         self.runtime.launch_verify(ev, sync=True)
-        for r, n, t in zip(rows, n_match, commit_tok):
-            dvr.apply_verify_result(r, n, t, window=W)
+        tr, au = self.obs.tracer, self.obs.audit
+        if tr.enabled:
+            tr.pass_span("verify", "verify", self.runtime.last_verify_span,
+                         self._trace_args(ev))
+        for i, (r, n, t) in enumerate(zip(rows, n_match, commit_tok)):
+            cand_len = len(r.candidates)
+            base = len(r.committed)
+            nc, nrej = dvr.apply_verify_result(r, n, t, window=W)
+            self._c_passes.inc()
+            self._c_committed.inc(nc)
+            if nrej:
+                self._c_rollbacks.inc()
+                self._c_recomputed.inc(nrej)
+                self._h_rollback_depth.observe(nrej)
+            if tr.enabled:
+                tr.instant("rollback" if nrej else "commit",
+                           t=self.runtime.now, rid=r.rid,
+                           window=r.num_verify_passes - 1, n_match=n,
+                           committed=nc, rejected=nrej, cascaded=0)
+            if r.first_token_clock < 0 and r.committed:
+                r.first_token_clock = self.runtime.now
+            if au.enabled:
+                # sync windows never enter the in-flight FIFO, so the
+                # audit window id is the request's verify-pass ordinal
+                # (``window_seq`` stays untouched on this path)
+                for j in range(nc):
+                    idx = base + j
+                    au.record(TokenProvenance(
+                        rid=r.rid, index=idx, token=r.committed[idx],
+                        origin="verify", schedule=VERIFY_SCHEDULE,
+                        window=r.num_verify_passes - 1, occurrence=0,
+                        n_match=n, accepted=j < min(n, cand_len),
+                        rollback=nrej > 0,
+                        margin=float(margins[i][j]),
+                    ))
             if self.statepool.active:
                 # live state + replay anchor <- the commit-index state
                 # the pass just checkpointed (ring 0)
@@ -1469,42 +1809,44 @@ class Engine:
                 pev = self._prefill_chunk_post(
                     preq, C, ps, preal, logits, time.perf_counter() - t0
                 )
-                self.runtime.charge(pev)
+                self._charge_main(pev)
                 return pev, None, None, []
             if batch:
                 t0 = time.perf_counter()
-                self.pool.data, nxt = self._decode_fn(B, schedule)(
+                self.pool.data, nxt, dmarg = self._decode_fn(B, schedule)(
                     self.params, self.pool.data, *dargs
                 )
                 dev = self._decode_post(
-                    batch, schedule, dpos, nxt, time.perf_counter() - t0
+                    batch, schedule, dpos, nxt, time.perf_counter() - t0,
+                    dmarg,
                 )
-                self.runtime.charge(dev)
+                self._charge_main(dev)
                 return None, dev, None, []
             rows, fls, ring_idxs, slots, starts, n_pad = vstates[0]
             t0 = time.perf_counter()
             if rec:
                 (self.pool.data, self.statepool.anchor, commit_rows, n_match,
-                 commit_tok, _v) = self._verify_fn(
+                 commit_tok, _v, vmarg) = self._verify_fn(
                     self.params, self.pool.data, self.statepool.anchor,
                     *vargs_list[0]
                 )
             else:
                 commit_rows = None
-                self.pool.data, n_match, commit_tok, _v = self._verify_fn(
-                    self.params, self.pool.data, *vargs_list[0]
+                self.pool.data, n_match, commit_tok, _v, vmarg = (
+                    self._verify_fn(self.params, self.pool.data,
+                                    *vargs_list[0])
                 )
             vev = self._verify_event(
                 rows, starts, n_pad, time.perf_counter() - t0, n_decodable,
                 True,
             )
             self._verify_postlaunch(rows, fls, vev, ring_idxs, slots, starts,
-                                    n_match, commit_tok, commit_rows)
+                                    n_match, commit_tok, commit_rows, vmarg)
             return None, None, vev, []
 
         t0 = time.perf_counter()
         anchor = self.statepool.anchor if rec else None
-        pool, anchor, logits_p, nxt, vouts = self._fused_fn(
+        pool, anchor, logits_p, nxt, dmarg, vouts = self._fused_fn(
             C if preq is not None else None, B, schedule, len(groups)
         )(
             self.params, self.pool.data, anchor,
@@ -1517,6 +1859,12 @@ class Engine:
             self.statepool.anchor = anchor
         wall = time.perf_counter() - t0
         share = wall / n_subs
+        self._c_fused.inc()
+        tr = self.obs.tracer
+        if tr.enabled:
+            # one launch with nested sub-pass slices: the sub-passes
+            # recorded below nest under a fused_step parent span
+            tr.begin_group("fused_step", iter=self._now, subs=n_subs)
 
         pev = dev = vev = None
         vextra: List[Dict[str, Any]] = []
@@ -1525,28 +1873,30 @@ class Engine:
             pev = self._prefill_chunk_post(preq, C, ps, preal, logits_p,
                                            share)
             lead = False
-            self.runtime.charge(pev)
+            self._charge_main(pev)
         if batch:
-            dev = self._decode_post(batch, schedule, dpos, nxt, share)
+            dev = self._decode_post(batch, schedule, dpos, nxt, share, dmarg)
             if not lead:
                 dev["fused"] = True
             lead = False
-            self.runtime.charge(dev)
+            self._charge_main(dev)
         for gi, (rows, fls, ring_idxs, slots, starts, n_pad) in enumerate(
             vstates
         ):
-            commit_rows, n_match, commit_tok = vouts[gi]
+            commit_rows, n_match, commit_tok, vmarg = vouts[gi]
             ev = self._verify_event(rows, starts, n_pad, share, n_decodable,
                                     True)
             if not lead:
                 ev["fused"] = True
             lead = False
             self._verify_postlaunch(rows, fls, ev, ring_idxs, slots, starts,
-                                    n_match, commit_tok, commit_rows)
+                                    n_match, commit_tok, commit_rows, vmarg)
             if vev is None:
                 vev = ev
             else:
                 vextra.append(ev)
+        if tr.enabled:
+            tr.end_group()
         return pev, dev, vev, vextra
 
     def _finish(self, req: Request) -> None:
@@ -1561,6 +1911,25 @@ class Engine:
         self.statepool.note_release(req.slot)
         req.slot = -1
         self.finished.append(req)
+        self._c_finished.inc()
+        now = self.runtime.now
+        if req.submit_clock >= 0:
+            self._h_e2e.observe(now - req.submit_clock)
+            if req.first_token_clock >= 0:
+                self._h_ttft.observe(req.first_token_clock - req.submit_clock)
+        if req.first_token_clock >= 0 and req.num_output > 1:
+            self._h_tpot.observe(
+                (now - req.first_token_clock) / (req.num_output - 1)
+            )
+        if self.mode == Mode.LLM42 and req.sampling.is_deterministic:
+            self._h_acceptance.observe(req.accept_ema)
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.instant("retire", t=now, rid=req.rid,
+                       committed=req.num_output,
+                       rollbacks=req.num_rollbacks,
+                       verify_passes=req.num_verify_passes)
+            tr.request_end(req.rid, now)
 
     def _retire(self) -> None:
         done = [r for r in self.running if r.finished() or (
@@ -1612,10 +1981,23 @@ class Engine:
         ``overlap`` event for log replay (``costmodel``)."""
         self._now += 1
         self.runtime.begin_iteration()
+        self._c_iters.inc()
+        tr = self.obs.tracer
+        if tr.enabled:
+            # iteration window start: under the logical clock
+            # begin_iteration just advanced main by 1.0, so the window the
+            # tick represents is [now - 1, now]; costed passes extend the
+            # frontier from now onward
+            tr.begin_iteration(
+                self._now,
+                self.runtime.now - (1.0 if self.runtime.logical else 0.0),
+            )
         applied = self._apply_due_verdicts()
         self._retire()
         self._admit()
         if not self.running and not self.queue and not self.preempted:
+            if tr.enabled:
+                tr.end_iteration(self.runtime.now)
             return False
         self.peak_running = max(self.peak_running, len(self.running))
 
@@ -1636,12 +2018,12 @@ class Engine:
             # launches one window per request per iteration.
             if plan.prefill is not None:
                 pev = self._prefill_advance(plan.prefill, self._chunk_size())
-                self.runtime.charge(pev)
+                self._charge_main(pev)
             if plan.decode:
                 batch = [r for r in plan.decode if not r.done_decoding()]
                 if batch:
                     dev = self._decode_step(batch)
-                    self.runtime.charge(dev)
+                    self._charge_main(dev)
             if plan.verify:
                 rows, seen = [], set()
                 for r in plan.verify:
@@ -1653,6 +2035,8 @@ class Engine:
                     n_decodable=len(sched.decodable(view)),
                 )
         self.runtime.end_iteration()
+        if tr.enabled:
+            tr.end_iteration(self.runtime.now)
 
         subs = [("decode", dev), ("verify", vev), ("prefill", pev)]
         present = [(k, ev) for k, ev in subs if ev is not None]
@@ -1719,6 +2103,7 @@ class Engine:
         for r in self.running:
             for outcome in pipeline.apply_ready(r, self.window, now):
                 applied = True
+                self._note_splice(r, outcome)
                 self.statepool.note_splice(r.slot, len(outcome.cascaded))
                 if not self.statepool.active or (
                     r.finished() and not (r.pipeline or r.candidates)

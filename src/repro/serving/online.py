@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Tuple
 
 from repro.models.base import ModelConfig
 from repro.serving import costmodel
@@ -34,6 +34,10 @@ class OnlineResult:
     ttfts: Dict[int, float]  # rid -> time-to-first-token seconds (sim)
     total_time: float
     out_tokens: int
+    #: final ``engine.obs.metrics.snapshot()`` — the registry view of the
+    #: run (stream occupancy, rollback depth distribution, TTFT/TPOT
+    #: percentiles on the sim clock, block-pool/prefix-cache state)
+    metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 def run_online(
@@ -102,7 +106,9 @@ def run_online(
         ttft.setdefault(r.rid, clock - arrival[r.rid])
 
     out_tokens = sum(r.num_output for r in engine.finished)
-    return OnlineResult(latency, ttft, clock, out_tokens)
+    return OnlineResult(
+        latency, ttft, clock, out_tokens, engine.obs.metrics.snapshot()
+    )
 
 
 def percentile(values: List[float], p: float) -> float:

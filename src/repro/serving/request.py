@@ -56,6 +56,14 @@ class InflightVerify:
     #: commit token — so acceptance telemetry must count them even though
     #: ``cands``/``n_match`` no longer do
     shifted: int = 0
+    #: per-request window submission sequence number (``Request.window_seq``
+    #: at submit) — the audit log's window id
+    seq: int = -1
+    #: verifier top-1/top-2 logit margins per window position, parallel to
+    #: ``cands`` + the commit token (audit provenance; filled only when an
+    #: audit log is attached, and popped alongside ``cands`` by front
+    #: normalization so the alignment survives shifts)
+    margins: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
@@ -123,6 +131,10 @@ class Request:
     num_cascaded_windows: int = 0  # windows discarded by cascade rollbacks
     prefill_time: float = -1.0
     finish_time: float = -1.0
+    # stream-clock latency marks (obs.metrics TTFT/TPOT/e2e histograms):
+    # set at submit / first committed token, read at retirement
+    submit_clock: float = -1.0
+    first_token_clock: float = -1.0
     # encdec / multimodal payloads (stub-frontend outputs)
     enc_embeds: Optional[object] = None
     prefix_embeds: Optional[object] = None

@@ -58,6 +58,26 @@ def sample_token(
     return jnp.where(temperature <= 0.0, greedy, stochastic)
 
 
+def top2_margin(logits: jax.Array) -> jax.Array:
+    """Top-1 minus top-2 logit margin along the last axis; ties give 0.
+
+    The second max is taken with the argmax *index* masked out (not the
+    max *value*), so two equal maximal logits — the only case where an
+    infinitesimal reduction reorder can flip the argmax — report margin
+    exactly 0.  Reductions span the vocab axis only (batch-invariant like
+    the argmax in ``sample_token``).  This is the audit log's provenance
+    margin and the calibration signal for margin-gated sparse
+    verification (ROADMAP): a token with margin ``m`` is stable under any
+    schedule whose accumulated error is below ``m/2``.
+    """
+    x = logits.astype(F32)
+    am = jnp.argmax(x, axis=-1)
+    top1 = jnp.max(x, axis=-1)
+    is_top1 = jnp.arange(x.shape[-1]) == am[..., None]
+    top2 = jnp.max(jnp.where(is_top1, -jnp.inf, x), axis=-1)
+    return top1 - top2
+
+
 def sample_batch(
     logits: jax.Array,  # (B, V)
     seeds: jax.Array,  # (B,)

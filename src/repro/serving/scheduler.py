@@ -395,6 +395,9 @@ class AdaptivePolicy(SchedulePolicy):
         self.promote_above = promote_above
         self._overlap = OverlapPolicy(max_inflight=max_inflight)
         self._demoted: Set[int] = set()
+        # hysteresis-transition telemetry (obs.metrics gauges)
+        self.num_demotions = 0
+        self.num_promotions = 0
 
     def _update_demotions(self, view: SchedulerView) -> None:
         alive = set()
@@ -406,8 +409,10 @@ class AdaptivePolicy(SchedulePolicy):
             if r.rid in self._demoted:
                 if ema >= self.promote_above:
                     self._demoted.discard(r.rid)
+                    self.num_promotions += 1
             elif ema < self.demote_below:
                 self._demoted.add(r.rid)
+                self.num_demotions += 1
         self._demoted &= alive  # drop retired requests
 
     def _eager_depth(self, view: SchedulerView, r: Request) -> int:
