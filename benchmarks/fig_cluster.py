@@ -1,0 +1,170 @@
+"""Mesh-scale serving sweep — replicas x TP on the cost model.
+
+Drives the deterministic cluster front end (``repro.cluster``) on
+shared-prefix traffic: N engine replicas behind the radix-prefix-affinity
+router, each replica a REAL engine on its own costed dual-clock runtime,
+TP width threaded into the cost model's per-event scaling (FLOPs/bytes
+divided across shards plus the un-overlapped all-reduce ICI term).
+
+Reported per configuration:
+
+  * aggregate throughput (committed tokens per simulated second across
+    the fleet) and goodput (throughput from requests meeting the TTFT
+    SLO) — the replica sweep is weak-scaled (arrival rate and request
+    count grow with the fleet), so near-linear aggregate scaling is the
+    acceptance bar;
+  * router telemetry: affinity hit rate, load-guard diverts,
+    cross-replica block transfers;
+  * the TP sweep at fixed workload: per-token latency drops sub-linearly
+    (the ICI term), committed streams bitwise unchanged.
+
+Two determinism assertions ride along, mirroring the test suite: the
+deterministic requests' committed streams are bitwise identical across
+replica counts (same arrival trace, fixed workload) and across TP widths
+(the pinned canonical mesh-reduction schedule).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.cluster import Cluster, run_online
+from repro.core.determinism import Mode
+from repro.serving.engine import Engine
+from repro.serving.online import percentile
+from repro.training.data import poisson_arrivals
+from benchmarks.common import (
+    BENCH_POLICY, bench_model, emit, full_config, make_requests,
+)
+
+BLOCK = 16
+CAPACITY = 256
+SLO_TTFT_S = 1.0
+
+
+def _requests(cfg, n: int, sys_len: int, tail_len: int, max_new: int,
+              seed: int):
+    reqs = make_requests(
+        cfg, n, det_ratio=0.5, max_new=max_new, seed=seed,
+        in_lens=[sys_len + tail_len] * n,
+    )
+    sys_prompt = [(7 * j + 3) % cfg.vocab_size for j in range(sys_len)]
+    for r in reqs:  # shared system prompt, unique tail
+        r.prompt = sys_prompt + r.prompt[sys_len:]
+    return reqs
+
+
+def _run(cfg, params, fcfg, *, replicas, tp, n, qps, sys_len, tail_len,
+         max_new, max_batch, seed=0):
+    def make_engine(idx):
+        return Engine(
+            cfg, params, mode=Mode.LLM42, policy=BENCH_POLICY, window=8,
+            group=4, max_batch=max_batch, capacity=CAPACITY,
+            prefill_chunk=BLOCK, block_size=BLOCK, tp=tp,
+        )
+
+    cluster = Cluster(make_engine, replicas)
+    reqs = _requests(cfg, n, sys_len, tail_len, max_new, seed)
+    arrivals = poisson_arrivals(n, qps, seed=seed)
+    t0 = time.time()
+    res = run_online(cluster, fcfg, list(zip(reqs, arrivals)))
+    wall = time.time() - t0
+    tt = list(res.ttfts.values())
+    return {
+        "tput": res.throughput,
+        "goodput": res.goodput(SLO_TTFT_S),
+        "ttft_p50": percentile(tt, 50),
+        "ttft_p99": percentile(tt, 99),
+        "hit_rate": cluster.router.affinity_hit_rate,
+        "diverted": cluster.router.diverted,
+        "transfers": cluster.router.transfers,
+        "wall_s": wall,
+        "streams": {
+            r.rid: list(r.committed)
+            for r in cluster.finished if r.sampling.is_deterministic
+        },
+    }
+
+
+def run(base_n: int = 16, base_qps: float = 80.0, sys_len: int = 64,
+        tail_len: int = 6, max_new: int = 16, max_batch: int = 8):
+    cfg, params = bench_model()
+    fcfg = full_config()
+    rows = []
+    common = dict(sys_len=sys_len, tail_len=tail_len, max_new=max_new,
+                  max_batch=max_batch)
+
+    # -- replica sweep: weak scaling (workload grows with the fleet) -----
+    tput_by_r = {}
+    for r_count in (1, 2, 4):
+        r = _run(cfg, params, fcfg, replicas=r_count, tp=1,
+                 n=base_n * r_count, qps=base_qps * r_count, **common)
+        tput_by_r[r_count] = r["tput"]
+        rows.append((f"fig_cluster_r{r_count}_tput", "",
+                     round(r["tput"], 1)))
+        rows.append((f"fig_cluster_r{r_count}_goodput", "",
+                     round(r["goodput"], 1)))
+        rows.append((f"fig_cluster_r{r_count}_ttft_p99_ms", "",
+                     round(r["ttft_p99"] * 1e3, 2)))
+        rows.append((f"fig_cluster_r{r_count}_hit_rate", "",
+                     round(r["hit_rate"], 3)))
+        rows.append((f"fig_cluster_r{r_count}_transfers", "",
+                     r["transfers"]))
+    for r_count in (2, 4):
+        ratio = tput_by_r[r_count] / max(tput_by_r[1], 1e-12)
+        rows.append((f"fig_cluster_scaling_x{r_count}_ratio", "",
+                     round(ratio, 3)))
+        # near-linear aggregate scaling under weak scaling: each replica
+        # carries the single-replica load, the router only adds
+        # deterministic bookkeeping
+        assert ratio >= 0.7 * r_count, (
+            f"{r_count} replicas scaled {ratio:.2f}x (< {0.7 * r_count:.1f})"
+        )
+
+    # -- determinism across replica counts: FIXED workload ---------------
+    fixed = {
+        r_count: _run(cfg, params, fcfg, replicas=r_count, tp=1,
+                      n=base_n, qps=base_qps, **common)
+        for r_count in (1, 2, 4)
+    }
+    assert (fixed[1]["streams"] == fixed[2]["streams"]
+            == fixed[4]["streams"]), (
+        "replica count moved a deterministic committed stream"
+    )
+    rows.append(("fig_cluster_det_streams_replica_invariant", "", 1))
+
+    # -- TP sweep at fixed workload: cost scaling + stream invariance ----
+    tp_streams = {}
+    for tp in (1, 2, 4):
+        r = _run(cfg, params, fcfg, replicas=1, tp=tp,
+                 n=base_n, qps=base_qps, **common)
+        tp_streams[tp] = r["streams"]
+        rows.append((f"fig_cluster_tp{tp}_tput", "", round(r["tput"], 1)))
+        rows.append((f"fig_cluster_tp{tp}_ttft_p50_ms", "",
+                     round(r["ttft_p50"] * 1e3, 2)))
+    assert tp_streams[1] == tp_streams[2] == tp_streams[4], (
+        "TP width moved a deterministic committed stream"
+    )
+    rows.append(("fig_cluster_det_streams_tp_invariant", "", 1))
+    # sharding cuts per-shard work: wider TP must not be slower
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workload for CI (fewer, shorter requests)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(base_n=6, base_qps=60.0, sys_len=48, tail_len=4,
+                   max_new=10, max_batch=4)
+    else:
+        rows = run()
+    emit(rows, "name,us_per_call,derived", json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,7 @@ BENCHES = {
     "pipeline": "benchmarks/fig_pipeline.py",
     "cache": "benchmarks/fig_cache.py",
     "prefill": "benchmarks/fig_prefill.py",
+    "cluster": "benchmarks/fig_cluster.py",
 }
 
 

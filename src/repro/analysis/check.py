@@ -36,7 +36,7 @@ from typing import List, Optional
 from repro.analysis import hazards, invariance, kernel_lint, taint
 from repro.analysis.report import Finding, Report, load_allowlist
 
-CACHE_VERSION = 3  # bump to invalidate cached trace-pass results
+CACHE_VERSION = 4  # bump to invalidate cached trace-pass results
 
 
 def repo_root() -> Path:
@@ -89,7 +89,9 @@ def run_trace_passes(
     print("[check] tracing engine steps (no cache hit; this takes a few minutes)")
     inv_findings, certs, arch_traces = invariance.run_pass()
     hz_findings = hazards.run_pass(arch_traces)
-    findings = inv_findings + hz_findings
+    mesh_findings, mesh_certs = invariance.run_mesh_pass()
+    certs.update(mesh_certs)
+    findings = inv_findings + hz_findings + mesh_findings
 
     if use_cache:
         cache_file.parent.mkdir(parents=True, exist_ok=True)

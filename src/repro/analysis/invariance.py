@@ -51,6 +51,18 @@ WINDOW = 8
 CAPACITY = 128
 BLOCK_SIZE = 16
 MAX_BATCH = 20  # engine slots; >= max(BATCHES), never divisible by them
+#: Mesh widths the TP-invariance pass parameterizes engines over.  Every
+#: width divides CANONICAL_TP_SHARDS, so the pinned commit tree is
+#: realizable on all of them (distributed.sharding.tp_matmul).
+MESH_TPS = (1, 2, 4)
+#: Fixed batch for the mesh pass: mesh traces vary TP at constant batch,
+#: so batch-affine allowances must not fire — any divergence is a leak.
+MESH_BATCH = 13
+#: Arch classes the mesh pass sweeps: attention covers the pure-KV commit
+#: path, jamba the recurrent+MoE hybrid — between them every commit-path
+#: GEMM family is traced.  (The batch pass already sweeps all four; the
+#: mesh pass keeps the blocking gate's trace budget bounded.)
+MESH_ARCHES = ("attention", "jamba")
 
 
 def _ssm_smoke() -> ModelConfig:
@@ -81,7 +93,7 @@ ARCH_CLASSES: Dict[str, Callable[[], ModelConfig]] = {
 }
 
 
-def build_engine(cfg: ModelConfig) -> Engine:
+def build_engine(cfg: ModelConfig, tp: int = 1) -> Engine:
     """Engine over abstract params — real layout/metadata, no weights."""
     return Engine(
         cfg,
@@ -93,6 +105,7 @@ def build_engine(cfg: ModelConfig) -> Engine:
         capacity=CAPACITY,
         block_size=BLOCK_SIZE,
         prefill_chunk=BLOCK_SIZE,
+        tp=tp,
     )
 
 
@@ -282,11 +295,134 @@ def prove(tr: ArchTraces) -> tuple[list[Finding], dict]:
     return findings, cert
 
 
+def trace_arch_mesh(arch: str, tps=MESH_TPS, batch: int = MESH_BATCH) -> ArchTraces:
+    """Trace the engine's steps from engines built at each TP width.
+
+    The commit kinds (verify / prefill_chunk / decode_invariant) are traced
+    through engines constructed with ``tp=t`` — if any mesh parameter
+    leaked into a commit-path program, the jaxprs would differ across
+    ``t``.  The fast-path decode is traced under each engine's OWN
+    ``_decode_schedule`` (which threads ``tp`` un-pinned), giving the
+    negative control: the canonicalizer demonstrably sees TP when it is
+    present, so identical commit traces are a real proof, not blindness.
+
+    Reuses :class:`ArchTraces` with the TP width in the batch-key slot;
+    batch is held fixed so no batch-affine allowance can mask a leak.
+    """
+    cfg = ARCH_CLASSES[arch]()
+    traces: Dict[str, Dict[int, object]] = {
+        "verify": {},
+        "prefill_chunk": {},
+        "decode_invariant": {},
+        "decode_fast": {},
+    }
+    for t in tps:
+        engine = build_engine(cfg, tp=t)
+        traces["verify"][t] = dce(trace_verify(engine, batch))
+        traces["prefill_chunk"][t] = dce(trace_prefill_chunk(engine, batch))
+        traces["decode_invariant"][t] = dce(
+            trace_decode(engine, batch, INVARIANT_SCHEDULE)
+        )
+    # negative control: widest vs no mesh; the un-pinned tp_shards in the
+    # fast schedule must change the traced reduction structure
+    for t in (min(tps), max(tps)):
+        engine = build_engine(cfg, tp=t)
+        traces["decode_fast"][t] = dce(
+            trace_decode(engine, batch, engine._decode_schedule(batch))
+        )
+    canon = {
+        kind: {t: canonicalize(jx, batch) for t, jx in per.items()}
+        for kind, per in traces.items()
+    }
+    return ArchTraces(arch=arch, cfg=cfg, traces=traces, canon=canon)
+
+
+def prove_mesh(tr: ArchTraces, batch: int = MESH_BATCH) -> tuple[list[Finding], dict]:
+    """Mesh-shape analogue of :func:`prove`: commit kinds must canonicalize
+    identically across TP widths (batch is constant, so ``compare_canonical``
+    runs with equal batch keys — every affine allowance degenerates to
+    exact equality), and the un-pinned fast path must NOT."""
+    findings: list[Finding] = []
+    cert: dict = {"arch": tr.arch, "config": tr.cfg.name, "kinds": {}}
+    for kind in _INVARIANT_KINDS:
+        per = tr.canon[kind]
+        tps = sorted(per)
+        ref = per[tps[0]]
+        invariant = True
+        for t in tps[1:]:
+            div = compare_canonical(ref, per[t], batch, batch)
+            if div is None:
+                continue
+            invariant = False
+            line, a, bb = div
+            findings.append(
+                Finding(
+                    pass_name="invariance",
+                    rule="mesh-variant-commit-path",
+                    where=f"trace::{tr.arch}::{kind}",
+                    arch=tr.arch,
+                    message=(
+                        f"{kind} jaxpr differs between TP {tps[0]} and "
+                        f"{t} at canonical line {line}:\n"
+                        f"      TP={tps[0]}: {a}\n      TP={t}: {bb}\n"
+                        "    the commit path must replay under the "
+                        "canonical mesh-reduction schedule regardless of "
+                        "the fast path's mesh (TP-invariance)"
+                    ),
+                )
+            )
+        cert["kinds"][kind] = {
+            "tps": tps,
+            "invariant": invariant,
+            "canonical_lines": len(ref.splitlines()),
+        }
+    fast = tr.canon["decode_fast"]
+    t0, t1 = sorted(fast)[:2]
+    control_ok = compare_canonical(fast[t0], fast[t1], batch, batch) is not None
+    cert["negative_control"] = {
+        "kind": "decode_fast",
+        "tps": [t0, t1],
+        "schedules_differ": control_ok,
+    }
+    if not control_ok:
+        findings.append(
+            Finding(
+                pass_name="invariance",
+                rule="prover-self-check",
+                where=f"trace::{tr.arch}::decode_fast",
+                arch=tr.arch,
+                message=(
+                    f"fast-path decode at TP={t0} and TP={t1} canonicalized "
+                    "identically — the canonicalizer cannot see TP "
+                    "reduction decomposition, so the mesh-invariance "
+                    "certificates above are vacuous"
+                ),
+            )
+        )
+    return findings, cert
+
+
+def run_mesh_pass(
+    tps=MESH_TPS, arches=MESH_ARCHES, batch: int = MESH_BATCH
+) -> tuple[list[Finding], dict]:
+    """Trace + prove TP-invariance of the commit path (certs keyed
+    ``mesh::<arch>``)."""
+    findings: list[Finding] = []
+    certs: dict = {}
+    for arch in arches:
+        tr = trace_arch_mesh(arch, tps, batch)
+        f, cert = prove_mesh(tr, batch)
+        findings.extend(f)
+        certs[f"mesh::{arch}"] = cert
+    return findings, certs
+
+
 def run_pass(batches=BATCHES, arches=None) -> tuple[list[Finding], dict, list]:
     """Trace + prove all arch classes.
 
     Returns ``(findings, certificates, arch_traces)`` — the traces are
-    reused by the hazard pass so each program is traced once.
+    reused by the hazard pass so each program is traced once.  Batch
+    invariance here; mesh (TP) invariance in :func:`run_mesh_pass`.
     """
     findings: list[Finding] = []
     certs: dict = {}

@@ -71,21 +71,61 @@ class Schedule(NamedTuple):
                       no MoE).  The fast path keeps dropping — it is
                       speculative anyway, and DVR catches drop-induced
                       flips like any other inconsistency.
+    ``tp_shards``     tensor-parallel decomposition of the K reduction: the
+                      number of contiguous K chunks whose partials are
+                      combined across the (logical or physical) ``model``
+                      mesh axis.  TP width changes reduction geometry
+                      exactly like batch size does ("Deterministic
+                      Inference across Tensor Parallel Sizes", PAPERS.md):
+                      each device reduces only its weight shard, then the
+                      partials meet in a cross-device combine whose tree
+                      follows the mesh.
+    ``tp_pinned``     True pins the TP partial-sum tree to the *canonical*
+                      form — f32 partials combined through a balanced
+                      binary tree in f32 — which is realizable bitwise on
+                      every mesh whose ``model`` axis width divides
+                      ``tp_shards``: a width-d mesh computes each device's
+                      local subtree locally and the top log2(d) levels via
+                      deterministic manual collectives
+                      (``distributed.sharding.tp_matmul``), reproducing the
+                      same arithmetic DAG.  False models the un-pinned fast
+                      path: partials combine *sequentially in
+                      combine_dtype*, mesh (ring-reduce) order — so the
+                      result varies with the actual TP width, which is the
+                      hazard the commit path must not inherit.
     """
 
     splits: int = 1
     kv_splits: int = 1
     combine_dtype: str = "float32"
     moe_no_drop: bool = False
+    tp_shards: int = 1
+    tp_pinned: bool = False
 
 
-#: The verifier's schedule: no splits, f32 combine.  Any op executed under
-#: this schedule with a fixed input shape is bitwise reproducible (O2), and
-#: because the verifier always pads its input to a fixed window shape, every
-#: verified token position sees this exact schedule on every run (O3).
+#: The canonical mesh-reduction decomposition: the commit path always
+#: reduces K in this many contiguous chunks, f32 partials, balanced-tree
+#: f32 combine — independent of the mesh the fast path actually ran on.
+#: Any power-of-two TP width d <= CANONICAL_TP_SHARDS realizes the same
+#: tree (each device sums its local subtree, the cross-device combine is
+#: the top of the same tree), so a token committed on TP=1 is bitwise the
+#: token committed on TP=2/4.
+CANONICAL_TP_SHARDS = 4
+
+#: The verifier's schedule: no batch-dependent splits, f32 combine, and the
+#: canonical (pinned) mesh-reduction decomposition.  Any op executed under
+#: this schedule with a fixed input shape is bitwise reproducible (O2);
+#: the verifier always pads its input to a fixed window shape, so every
+#: verified token position sees this exact schedule on every run (O3); and
+#: the pinned TP tree makes the guarantee hold across mesh shapes too.
 VERIFY_SCHEDULE = Schedule(
-    splits=1, kv_splits=1, combine_dtype="float32", moe_no_drop=True
+    splits=1, kv_splits=1, combine_dtype="float32", moe_no_drop=True,
+    tp_shards=CANONICAL_TP_SHARDS, tp_pinned=True,
 )
+
+#: Alias making the mesh story explicit at verifier call sites: the commit
+#: path replays under the canonical mesh-reduction schedule.
+CANONICAL_MESH_SCHEDULE = VERIFY_SCHEDULE
 
 #: The universal schedule used by BATCH_INVARIANT mode for *all* traffic.
 INVARIANT_SCHEDULE = VERIFY_SCHEDULE
@@ -137,6 +177,73 @@ def _split_sizes(k: int, splits: int) -> list:
     return [base + (1 if i < rem else 0) for i in range(splits)]
 
 
+def _reduce_k_f32(x: jax.Array, w: jax.Array, schedule: Schedule) -> jax.Array:
+    """Single-shard K reduction under the *local* split schedule; f32 result.
+
+    This is the arithmetic one device performs on its weight shard: splits<=1
+    is one f32 pass; otherwise the split-K chunk loop with sequential
+    combine_dtype combine.  The caller owns the cross-shard combine.
+    """
+    k = x.shape[-1]
+    if schedule.splits <= 1 or schedule.splits > k:
+        return jnp.matmul(
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        )
+    combine_dtype = jnp.dtype(schedule.combine_dtype)
+    sizes = _split_sizes(k, schedule.splits)
+    acc = None
+    start = 0
+    for size in sizes:
+        xc = jax.lax.slice_in_dim(x, start, start + size, axis=x.ndim - 1)
+        wc = jax.lax.slice_in_dim(w, start, start + size, axis=0)
+        partial = jnp.matmul(
+            xc.astype(jnp.float32), wc.astype(jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        ).astype(combine_dtype)
+        acc = partial if acc is None else (acc + partial)
+        start += size
+    return acc.astype(jnp.float32)
+
+
+def _tp_partials(x: jax.Array, w: jax.Array, schedule: Schedule) -> list:
+    """Per-shard f32 partials of the TP decomposition of the K reduction.
+
+    K is cut into ``schedule.tp_shards`` contiguous chunks — the weight
+    sharding a row-parallel matmul would have on a ``model``-axis mesh of
+    that width.  Each chunk is reduced with the local split schedule; chunk
+    boundaries are a pure function of (k, tp_shards), never of the mesh the
+    fast path actually ran on.
+    """
+    sizes = _split_sizes(x.shape[-1], schedule.tp_shards)
+    parts = []
+    start = 0
+    for size in sizes:
+        xc = jax.lax.slice_in_dim(x, start, start + size, axis=x.ndim - 1)
+        wc = jax.lax.slice_in_dim(w, start, start + size, axis=0)
+        parts.append(_reduce_k_f32(xc, wc, schedule))
+        start += size
+    return parts
+
+
+def tree_combine(parts: list) -> jax.Array:
+    """Balanced binary tree sum — the canonical cross-shard combine.
+
+    ``((p0+p1)+(p2+p3))`` for four partials.  A width-d mesh (d | len(parts),
+    d a power of two) realizes this tree exactly: each device adds its local
+    subtree, then the top log2(d) levels complete across devices in the same
+    association (``distributed.sharding.tp_matmul``).  Sequential combine
+    could NOT serve as the canonical form — ``((p0+p1)+p2)+p3`` on one
+    device groups differently from ``(p0+p1) + (p2+p3)`` on two.
+    """
+    while len(parts) > 1:
+        nxt = [parts[i] + parts[i + 1] for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
+
+
 def matmul(x: jax.Array, w: jax.Array, schedule: Schedule) -> jax.Array:
     """GEMM with an explicit reduction tree: ``x @ w`` under ``schedule``.
 
@@ -150,11 +257,30 @@ def matmul(x: jax.Array, w: jax.Array, schedule: Schedule) -> jax.Array:
     tree => potentially different low-order bits.  This is the exact
     mechanism of paper Fig. 3.
 
+    tp_shards == T additionally decomposes K into T mesh chunks *above* the
+    local split schedule.  Pinned (commit path): f32 partials, balanced-tree
+    f32 combine — the canonical mesh-reduction schedule, bitwise identical
+    on every power-of-two TP width dividing T.  Un-pinned (fast path): the
+    partials combine sequentially in combine_dtype, modelling a ring
+    all-reduce whose tree follows the actual mesh — so the result depends
+    on TP width, exactly the hazard O2 names for batch shape.
+
     Contraction is over the last dim of ``x`` and first dim of ``w``.
     Output dtype follows x.dtype.
     """
     out_dtype = x.dtype
     k = x.shape[-1]
+    if schedule.tp_shards > 1 and schedule.tp_shards <= k:
+        parts = _tp_partials(x, w, schedule)
+        if schedule.tp_pinned:
+            acc = tree_combine(parts)
+        else:
+            combine_dtype = jnp.dtype(schedule.combine_dtype)
+            acc = None
+            for p in parts:
+                pc = p.astype(combine_dtype)
+                acc = pc if acc is None else (acc + pc)
+        return acc.astype(out_dtype)
     if schedule.splits <= 1 or schedule.splits > k:
         acc = jnp.matmul(
             x.astype(jnp.float32), w.astype(jnp.float32),

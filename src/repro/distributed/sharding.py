@@ -23,14 +23,97 @@ from __future__ import annotations
 from typing import Any, Dict, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.determinism import (
+    Schedule, VERIFY_SCHEDULE, _split_sizes, matmul as sched_matmul, tree_combine,
+)
 from repro.models.base import ModelConfig, param_specs
 from repro.models.transformer import cache_spec
 
 
 Axes = Tuple[str, ...]
+
+
+def tp_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    mesh: Mesh,
+    *,
+    axis: str = "model",
+    schedule: Schedule = VERIFY_SCHEDULE,
+) -> jax.Array:
+    """Row-parallel commit-path GEMM under the canonical mesh-reduction schedule.
+
+    The physical realization of ``core.determinism.matmul`` with a pinned
+    schedule: ``w``'s K dim is sharded over the ``axis`` mesh axis (width d),
+    each device reduces its ``tp_shards/d`` canonical K chunks to f32
+    partials and sums them through its *local subtree* of the balanced tree,
+    then a recursive-doubling butterfly (``ppermute`` XOR pairs, one add per
+    level) completes the top log2(d) levels **in the same association** —
+    ``((p0+p1)+(p2+p3))`` regardless of d.  IEEE addition is commutative
+    bitwise, so each device adding (mine + received) lands on the identical
+    sum.  Hence the result is bitwise equal to the single-device
+    ``matmul(x, w, schedule)`` for every power-of-two d dividing
+    ``schedule.tp_shards`` — a token committed on TP=1 is the token
+    committed on TP=2/4.
+
+    Falls back to the logical single-device path when the mesh axis is
+    absent/1-wide, when d does not divide ``tp_shards``, or when K is not
+    divisible by ``tp_shards`` (chunk boundaries would straddle shards).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    K = x.shape[-1]
+    d = _axis_sizes(mesh).get(axis, 1)
+    tp = schedule.tp_shards
+    if (
+        d <= 1 or tp <= 1 or tp > K
+        or tp % d != 0 or K % tp != 0 or (d & (d - 1)) != 0
+    ):
+        return sched_matmul(x, w, schedule)
+
+    chunk = K // tp
+    per_dev = tp // d
+    local = schedule._replace(tp_shards=1, tp_pinned=False)
+    out_dtype = x.dtype
+
+    def body(xb: jax.Array, wb: jax.Array) -> jax.Array:
+        # xb: (..., K/d) local activation slice; wb: (K/d, N) weight shard.
+        parts = []
+        for c in range(per_dev):
+            xc = jax.lax.slice_in_dim(
+                xb, c * chunk, (c + 1) * chunk, axis=xb.ndim - 1
+            )
+            wc = jax.lax.slice_in_dim(wb, c * chunk, (c + 1) * chunk, axis=0)
+            parts.append(
+                sched_matmul(
+                    xc.astype(jnp.float32), wc.astype(jnp.float32), local
+                )
+            )
+        acc = tree_combine(parts)  # this device's local subtree, f32
+        if schedule.tp_pinned:
+            dist = 1
+            while dist < d:  # top log2(d) tree levels, canonical association
+                perm = [(i, i ^ dist) for i in range(d)]
+                acc = acc + jax.lax.ppermute(acc, axis, perm=perm)
+                dist *= 2
+        else:
+            # un-pinned: mesh-order ring reduce in combine_dtype — the
+            # fast-path hazard; result depends on d.
+            cd = jnp.dtype(schedule.combine_dtype)
+            acc = jax.lax.psum(acc.astype(cd), axis)
+        return acc.astype(out_dtype)
+
+    x_spec = P(*([None] * (x.ndim - 1) + [axis]))
+    w_spec = P(axis, None)
+    fn = shard_map(
+        body, mesh, in_specs=(x_spec, w_spec), out_specs=P(),
+        check_rep=False,
+    )
+    return fn(x, w)
 
 
 def _axis_sizes(mesh: Mesh) -> Dict[str, int]:

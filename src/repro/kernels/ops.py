@@ -47,7 +47,15 @@ def matmul(
     *,
     impl: str = "auto",
 ) -> jax.Array:
-    """Schedule-aware GEMM.  x: (..., K), w: (K, N)."""
+    """Schedule-aware GEMM.  x: (..., K), w: (K, N).
+
+    ``schedule.tp_shards > 1`` decomposes K into the mesh chunks of the
+    canonical TP reduction *above* the local split schedule: each chunk runs
+    the local kernel on f32 inputs (one device's shard arithmetic), then the
+    partials combine by the pinned balanced tree (commit path) or
+    sequentially in combine_dtype (un-pinned fast path) — same semantics as
+    the jnp reference in ``repro.core.determinism``.
+    """
     if impl == "auto":
         impl = "pallas" if on_tpu() else "jnp"
     if impl == "jnp":
@@ -55,8 +63,34 @@ def matmul(
 
         return jnp_matmul(x, w, schedule)
 
-    lead = x.shape[:-1]
     K = x.shape[-1]
+    if schedule.tp_shards > 1 and schedule.tp_shards <= K:
+        from repro.core.determinism import _split_sizes, tree_combine
+
+        local = schedule._replace(tp_shards=1, tp_pinned=False)
+        parts = []
+        start = 0
+        for size in _split_sizes(K, schedule.tp_shards):
+            xc = jax.lax.slice_in_dim(x, start, start + size, axis=x.ndim - 1)
+            wc = jax.lax.slice_in_dim(w, start, start + size, axis=0)
+            parts.append(
+                matmul(
+                    xc.astype(jnp.float32), wc.astype(jnp.float32),
+                    local, impl=impl,
+                )
+            )
+            start += size
+        if schedule.tp_pinned:
+            acc = tree_combine(parts)
+        else:
+            cd = jnp.dtype(schedule.combine_dtype)
+            acc = None
+            for p in parts:
+                pc = p.astype(cd)
+                acc = pc if acc is None else (acc + pc)
+        return acc.astype(x.dtype)
+
+    lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
     bm = 128 if M >= 128 else max(8, M)

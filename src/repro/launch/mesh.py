@@ -19,5 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Single-process mesh for CPU tests (data=devices/model, model axis)."""
     n = len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"model-axis width {model} does not divide the {n} available "
+            f"device(s); pick a divisor of {n}, or relaunch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<N> set "
+            f"before jax initializes to fake more host devices"
+        )
     return jax.make_mesh((n // model, model), ("data", "model"))

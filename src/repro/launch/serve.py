@@ -64,6 +64,50 @@ def build_requests(cfg, n, det_ratio, max_out, seed=0, workload="synthetic",
     return reqs
 
 
+def run_cluster(args, full_cfg, make_engine, reqs) -> None:
+    """Multi-replica path: N engines behind the deterministic router,
+    driven on per-replica costed dual-clock runtimes (repro.cluster)."""
+    from repro.cluster import Cluster, run_online
+    from repro.obs import validate_chrome_trace
+
+    cluster = Cluster(make_engine, args.replicas)
+    arrivals = [
+        (i / args.qps) if args.qps > 0 else 0.0 for i in range(len(reqs))
+    ]
+    t0 = time.time()
+    res = run_online(
+        cluster, full_cfg, list(zip(reqs, arrivals)),
+        invariant_mode=(args.mode == "batch_invariant"),
+    )
+    wall = time.time() - t0
+    done = cluster.finished
+    print(f"cluster: {args.replicas} replicas, tp={args.tp}, "
+          f"finished {len(done)} requests, {res.out_tokens} tokens "
+          f"in {wall:.1f}s wall")
+    print(f"simulated v5e fleet time: {res.total_time * 1e3:.1f} ms "
+          f"-> {res.throughput:.0f} tok/s aggregate "
+          f"(goodput @ TTFT<=1s: {res.goodput(1.0):.0f} tok/s)")
+    rt = cluster.router
+    print(f"router: {rt.assignments} assignments, "
+          f"affinity hit rate {100 * rt.affinity_hit_rate:.0f}%, "
+          f"{rt.diverted} diverted by load guard, "
+          f"{rt.transfers} block transfers "
+          f"({rt.transferred_tokens} KV tokens moved)")
+    occ = ", ".join(
+        f"r{r.idx}={res.metrics[f'cluster.replica.{r.idx}.occupancy']:.2f}"
+        for r in cluster.replicas
+    )
+    print(f"final occupancy: {occ}")
+    if args.trace_out:
+        trace = cluster.chrome_trace()
+        errors = validate_chrome_trace(trace)
+        assert not errors, f"trace failed schema validation: {errors[:5]}"
+        with open(args.trace_out, "w") as f:
+            json.dump(trace, f)
+        print(f"trace: {len(trace['traceEvents'])} events across "
+              f"{args.replicas} pids -> {args.trace_out}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -118,6 +162,23 @@ def main() -> None:
                     help="commit-aware radix prefix cache: admissions map"
                          " their longest committed-prefix match to shared"
                          " read-only KV blocks and prefill only the tail")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="logical tensor-parallel width for the FAST path"
+                         " (reduction schedule modeling a TP=N mesh; must"
+                         " divide the canonical pinned width).  The commit"
+                         " path always replays under the canonical mesh"
+                         " schedule, so committed streams are identical at"
+                         " any --tp — that invariance is what the analysis"
+                         " gate proves")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the deterministic cluster"
+                         " router (repro.cluster): radix-prefix-affinity"
+                         " routing with index tie-breaks, cross-replica KV"
+                         " block transfer on diverted prefix hits, aggregate"
+                         " goodput off the shared cost model")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="replica-mode arrival rate (requests/s of simulated"
+                         " time, evenly spaced; 0 = all arrive at t=0)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="export a Chrome/Perfetto trace-event JSON of the"
@@ -141,28 +202,38 @@ def main() -> None:
     print(f"arch={cfg.name} mode={args.mode} n={args.requests} "
           f"det_ratio={args.det_ratio}")
     params = init_params(cfg, jax.random.key(0))
-    engine = Engine(
-        cfg, params, mode=Mode(args.mode), policy=FAST_PATH_POLICY,
-        window=args.window, group=args.group, max_batch=args.max_batch,
-        capacity=min(cfg.max_seq_len, 512),
-        scheduler={
-            "default": None,
-            "overlap": OverlapPolicy(),
-            "pause": PauseDecodePolicy(),
-            "adaptive": AdaptivePolicy(),
-        }[args.scheduler],
-        spec_depth=args.spec_depth,
-        verify_latency_ms=args.verify_latency_ms,
-        cost_cfg=full_cfg,  # stream deadlines priced at the full model's scale
-        prefill_chunk=args.prefill_chunk,
-        block_size=args.block_size,
-        num_blocks=args.num_blocks,
-        prefix_cache=(args.prefix_cache == "on"),
-        trace=args.trace_out is not None,
-        audit=args.audit_out is not None,
-    )
+
+    def make_engine(idx: int = 0) -> Engine:
+        return Engine(
+            cfg, params, mode=Mode(args.mode), policy=FAST_PATH_POLICY,
+            window=args.window, group=args.group, max_batch=args.max_batch,
+            capacity=min(cfg.max_seq_len, 512),
+            scheduler={
+                "default": None,
+                "overlap": OverlapPolicy(),
+                "pause": PauseDecodePolicy(),
+                "adaptive": AdaptivePolicy(),
+            }[args.scheduler],
+            spec_depth=args.spec_depth,
+            verify_latency_ms=args.verify_latency_ms,
+            cost_cfg=full_cfg,  # deadlines priced at the full model's scale
+            prefill_chunk=args.prefill_chunk,
+            block_size=args.block_size,
+            num_blocks=args.num_blocks,
+            prefix_cache=(args.prefix_cache == "on"),
+            trace=args.trace_out is not None,
+            audit=args.audit_out is not None,
+            tp=args.tp,
+        )
+
     reqs = build_requests(cfg, args.requests, args.det_ratio, args.max_new,
                           args.seed, args.workload)
+
+    if args.replicas > 1:
+        run_cluster(args, full_cfg, make_engine, reqs)
+        return
+
+    engine = make_engine()
     for r in reqs:
         engine.submit(r)
     t0 = time.time()

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.determinism import Schedule, matmul, segment_reduce_sum
+from repro.kernels import ops
 
 F32 = jnp.float32
 
@@ -308,7 +309,7 @@ def attention_paged(
     nblk = tables.shape[1]
     q, k_new, v_new = _qkv(p, cfg, x, schedule)
     abs_pos = start_pos[:, None] + jnp.arange(W)[None, :]  # (B, W)
-    q = rope(q, abs_pos, cfg.rope_theta) * (cfg.hd**-0.5)
+    q = rope(q, abs_pos, cfg.rope_theta)
     k_new = rope(k_new, abs_pos, cfg.rope_theta)
 
     blk = abs_pos // bs  # (B, W)
@@ -319,6 +320,20 @@ def attention_paged(
     v_cache = cache["v"].at[bid, off].set(v_new.astype(cache["v"].dtype))
     pos_cache = cache["pos"].at[bid, off].set(abs_pos)
 
+    if W == 1 and ops.on_tpu() and cfg.logit_softcap == 0:
+        # single-token decode on TPU: the table-walking Pallas kernels
+        # (commit single-pass vs `# det: fastpath` split variant, selected
+        # by the schedule) read K/V in place — the (B, nblk*bs, ...) view
+        # gather below never materializes.  The dispatcher scales q by
+        # hd^-0.5 itself, so it gets the unscaled roped q.
+        out = ops.paged_attention(
+            q[:, 0], k_cache, v_cache, pos_cache, tables, abs_pos[:, 0],
+            schedule, null_bid=paged.null_bid,
+        )
+        out = matmul(out.reshape(B, W, -1).astype(x.dtype), p["wo"], schedule)
+        return out, {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+    q = q * (cfg.hd**-0.5)
     flat = jnp.where(tables < 0, paged.null_bid, tables)  # (B, nblk)
     k_view = k_cache[flat].reshape(B, nblk * bs, -1, cfg.hd)
     v_view = v_cache[flat].reshape(B, nblk * bs, -1, cfg.hd)

@@ -97,7 +97,9 @@ class NullTracer:
     def end_group(self) -> None:
         pass
 
-    def to_chrome_trace(self) -> Dict[str, Any]:
+    def to_chrome_trace(
+        self, pid: int = 0, process_name: str = "llm42-engine"
+    ) -> Dict[str, Any]:
         return {"traceEvents": [], "displayTimeUnit": "ms"}
 
 
@@ -211,15 +213,24 @@ class Tracer(NullTracer):
 
     # -- export ---------------------------------------------------------
 
-    def to_chrome_trace(self) -> Dict[str, Any]:
-        """Chrome trace-event JSON (``traceEvents`` array form)."""
+    def to_chrome_trace(
+        self, pid: int = 0, process_name: str = "llm42-engine"
+    ) -> Dict[str, Any]:
+        """Chrome trace-event JSON (``traceEvents`` array form).
+
+        ``pid``/``process_name`` namespace this tracer's rows: the cluster
+        front end exports each replica under its own pid, so Perfetto
+        shows the fleet side by side as separate processes
+        (``Cluster.chrome_trace`` merges the per-replica arrays; the
+        validator keys rows on (pid, tid), so a merged trace validates).
+        """
         self._flush(self._t0 + 1.0)  # leftovers from a final partial iter
         events: List[Dict[str, Any]] = [
-            {"ph": "M", "pid": 0, "tid": 0, "name": "process_name",
-             "args": {"name": "llm42-engine"}},
+            {"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
+             "args": {"name": process_name}},
         ]
         for tid, tname in _THREAD_NAMES.items():
-            events.append({"ph": "M", "pid": 0, "tid": tid,
+            events.append({"ph": "M", "pid": pid, "tid": tid,
                            "name": "thread_name", "args": {"name": tname}})
         # complete slices, per-row (ts, -dur) order => parents precede
         # children at equal boundaries, rows are monotone
@@ -230,20 +241,20 @@ class Tracer(NullTracer):
             # exactly instead of drifting apart by float error
             ts = round(start * _US, 3)
             events.append({
-                "ph": "X", "pid": 0, "tid": tid, "name": name, "cat": "pass",
-                "ts": ts,
+                "ph": "X", "pid": pid, "tid": tid, "name": name,
+                "cat": "pass", "ts": ts,
                 "dur": round(round(end * _US, 3) - ts, 3),
                 "args": args,
             })
         for name, tid, t, args in sorted(self._instants, key=lambda i: i[2]):
             events.append({
-                "ph": "i", "pid": 0, "tid": tid, "name": name,
+                "ph": "i", "pid": pid, "tid": tid, "name": name,
                 "cat": "protocol", "s": "t", "ts": round(t * _US, 3),
                 "args": args,
             })
         for ph, rid, t in sorted(self._asyncs, key=lambda a: (a[2], a[0])):
             events.append({
-                "ph": ph, "pid": 0, "tid": TID_PROTOCOL,
+                "ph": ph, "pid": pid, "tid": TID_PROTOCOL,
                 "name": f"request {rid}", "cat": "request", "id": str(rid),
                 "ts": round(t * _US, 3),
             })

@@ -253,6 +253,34 @@ def wipe_blocks(pool: Any, lay: Layout, bids: List[int]) -> Any:
     return jax.tree_util.tree_map(wipe, pool, lay.axes)
 
 
+def copy_blocks(
+    src_pool: Any, dst_pool: Any, lay: Layout,
+    src_bids: List[int], dst_bids: List[int],
+) -> Any:
+    """Copy paged-leaf block rows ``src_bids`` (of ``src_pool``) into
+    ``dst_bids`` (of ``dst_pool``); returns the updated destination tree.
+
+    The cluster front end's cross-replica prefix transfer
+    (``cluster.replica.transfer_prefix``): both pools must share one
+    :class:`Layout`.  Slot leaves (recurrent state, rings) never move —
+    prefix sharing is defined only for paged full-attention KV.
+    """
+    assert len(src_bids) == len(dst_bids)
+    if not src_bids:
+        return dst_pool
+    si = jnp.array(src_bids, jnp.int32)
+    di = jnp.array(dst_bids, jnp.int32)
+
+    def cp(dst_leaf, src_leaf, desc):
+        if desc.kind != "paged":
+            return dst_leaf
+        rows = jnp.take(src_leaf, si, axis=desc.axis)
+        at = (slice(None),) * desc.axis + (di,)
+        return dst_leaf.at[at].set(rows.astype(dst_leaf.dtype))
+
+    return jax.tree_util.tree_map(cp, dst_pool, src_pool, lay.axes)
+
+
 def wipe_slot(pool: Any, lay: Layout, slot: int) -> Any:
     """Reset a released slot's dense leaves (sliding rings, recurrent
     state): int32 leaves to -1, the rest to zero — the old dense-pool

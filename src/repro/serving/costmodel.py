@@ -57,7 +57,7 @@ class Hardware:
     name: str = "tpu-v5e"
     peak_flops: float = 197e12  # bf16 / chip
     hbm_bw: float = 819e9  # B/chip/s
-    ici_bw: float = 50e9  # B/link/s (unused in single-chip serving model)
+    ici_bw: float = 50e9  # B/link/s (TP all-reduce term, events with "tp")
     # batch-invariance penalties, calibrated from paper Fig. 4
     bi_compute_frac: float = 194.0 / 527.0
     bi_mem_frac: float = 0.7
@@ -262,6 +262,21 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
     fused = ev.get("fused", False)
     bytes_moved = (0 if fused else pbytes) + kv_read + kvb * tokens
 
+    # width-tp model-axis mesh: weights, KV and matmul FLOPs shard 1/tp per
+    # chip; each layer's row-parallel matmuls all-reduce the
+    # (tokens, d_model) activation over ICI — a ring moves 2(tp-1)/tp of
+    # the data per chip, twice per layer.  The un-overlapped ICI term is
+    # what makes the fig_cluster TP sweep sub-linear.
+    tp = int(ev.get("tp", 1))
+    t_ici = 0.0
+    if tp > 1:
+        flops /= tp
+        bytes_moved /= tp
+        t_ici = (
+            2.0 * cfg.num_layers * tokens * cfg.d_model * hw.dtype_bytes
+            * 2.0 * (tp - 1) / tp / hw.ici_bw
+        )
+
     peak = hw.peak_flops
     bw = hw.hbm_bw
     util = min(1.0, (rows * max(splits, 1)) / hw.sat_rows)
@@ -272,7 +287,7 @@ def step_time(cfg: ModelConfig, ev: Dict[str, Any], hw: Hardware = V5E) -> float
 
     t_compute = flops / (peak * max(util, 1e-3))
     t_memory = bytes_moved / bw
-    t = max(t_compute, t_memory)
+    t = max(t_compute, t_memory) + t_ici
     if not fused:
         t += hw.launch_overhead_s
     return t
@@ -291,6 +306,11 @@ def _lane_times(
             s["invariant"] = True
         for s in extra:
             s["invariant"] = True
+    if ev.get("tp", 1) > 1:
+        for s in sub.values():
+            s.setdefault("tp", ev["tp"])
+        for s in extra:
+            s.setdefault("tp", ev["tp"])
     t_main = sum(
         step_time(cfg, s, hw) for k, s in sub.items() if k != "verify"
     )

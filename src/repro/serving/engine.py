@@ -117,11 +117,25 @@ class Engine:
         paged_attention: bool = True,  # in-place paged forward + fused step
         trace: bool = False,  # dual-stream request tracing (repro.obs.trace)
         audit: bool = False,  # per-token determinism audit (repro.obs.audit)
+        tp: int = 1,  # fast-path tensor-parallel width (logical model axis)
     ):
         self.cfg = cfg
         self.params = params
         self.mode = mode
         self.policy = policy
+        # Logical TP width of the FAST PATH: decode/prefill schedules carry
+        # tp_shards=tp un-pinned (the mesh-order combine a width-tp ring
+        # all-reduce would produce).  The commit path never reads this —
+        # make_verify_fn closes over CANONICAL_MESH_SCHEDULE, whose pinned
+        # balanced tree every power-of-two width dividing
+        # CANONICAL_TP_SHARDS realizes bitwise — which is exactly the
+        # TP-invariance theorem the analysis prover checks.
+        from repro.core.determinism import CANONICAL_TP_SHARDS
+        assert tp >= 1 and CANONICAL_TP_SHARDS % tp == 0, (
+            f"tp={tp} must divide the canonical shard count "
+            f"{CANONICAL_TP_SHARDS} for the commit tree to be realizable"
+        )
+        self.tp = int(tp)
         self.window = window
         self.group = group
         self.max_batch = max_batch
@@ -239,6 +253,8 @@ class Engine:
         def cost_fn(ev: Dict[str, Any]) -> float:
             if invariant:
                 ev = dict(ev, invariant=True)
+            if self.tp > 1 and "tp" not in ev:
+                ev = dict(ev, tp=self.tp)
             return costmodel.step_time(cost_cfg, ev, hw)
 
         self.runtime = streams.DualClockRuntime(
@@ -278,6 +294,8 @@ class Engine:
                    unit="requests", help="requests evicted, restore pending")
         m.gauge_fn("engine.peak_running", lambda: self.peak_running,
                    unit="requests", help="peak concurrent running requests")
+        m.gauge_fn("engine.tp", lambda: self.tp,
+                   unit="shards", help="fast-path tensor-parallel width")
         self._c_committed = m.counter(
             "tokens.committed", unit="tokens",
             help="tokens committed across all requests (prefill T0 + "
@@ -1371,7 +1389,13 @@ class Engine:
     def _decode_schedule(self, B: int) -> Schedule:
         if self.mode == Mode.BATCH_INVARIANT:
             return INVARIANT_SCHEDULE
-        return self.policy.schedule_for(B)
+        sched_ = self.policy.schedule_for(B)
+        if self.tp > 1:
+            # fast path on a width-tp mesh: the TP partial-sum tree follows
+            # the mesh (un-pinned) — mesh geometry perturbs decode exactly
+            # like batch geometry does, and DVR catches both the same way
+            sched_ = sched_._replace(tp_shards=self.tp, tp_pinned=False)
+        return sched_
 
     def _decode_prep(self, batch: List[Request]):
         """Device arguments for one decode pass over ``batch``.  Safe to

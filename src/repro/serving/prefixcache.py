@@ -104,6 +104,21 @@ class PrefixCache:
             node = child
         return bids
 
+    def peek(self, tokens: Sequence[int]) -> int:
+        """Blocks of the longest cached whole-block prefix of ``tokens``,
+        WITHOUT bumping LRU clocks or hit-rate stats — the cluster
+        router's affinity probe, which inspects every replica's radix and
+        must not perturb the LRU state of replicas it does not pick."""
+        n = 0
+        node = self.root
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            n += 1
+            node = child
+        return n
+
     def note_lookup(self, n_matched_blocks: int) -> None:
         """Record one completed admission lookup in the hit-rate stats."""
         if n_matched_blocks > 0:

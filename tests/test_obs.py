@@ -322,6 +322,62 @@ def test_policies_agree_with_observability_on(model):
         assert streams == ref, f"{scheduler} moved a deterministic stream"
 
 
+def _cluster_run(cfg, params, obs_on):
+    from repro.cluster import Cluster, run_online
+
+    def make_engine(idx):
+        return Engine(cfg, params, mode=Mode.LLM42, policy=DRIFTY, window=5,
+                      group=2, max_batch=2, capacity=128,
+                      trace=obs_on, audit=obs_on)
+
+    cluster = Cluster(make_engine, 2)
+    shared = [(7 * j + 3) % cfg.vocab_size for j in range(32)]
+    reqs = [
+        Request(
+            rid=i, prompt=shared + [(5 * i + j) % cfg.vocab_size
+                                    for j in range(3)],
+            sampling=SamplingParams(
+                max_new_tokens=10, is_deterministic=(i % 2 == 0),
+                seed=70 + i,
+            ),
+        )
+        for i in range(5)
+    ]
+    res = run_online(cluster, cfg, [(r, 0.0) for r in reqs])
+    return cluster, res
+
+
+def test_cluster_router_path_is_observer_effect_free(model):
+    """The routed multi-replica path keeps the tentpole invariant: with
+    per-replica tracing + auditing on vs off, the router makes the same
+    assignments and every replica commits bitwise-identical streams."""
+    cfg, params = model
+    cl_on, res_on = _cluster_run(cfg, params, True)
+    cl_off, res_off = _cluster_run(cfg, params, False)
+    assert res_on.assignment == res_off.assignment
+    on = {r.rid: list(r.committed) for r in cl_on.finished}
+    off = {r.rid: list(r.committed) for r in cl_off.finished}
+    assert on == off
+
+
+def test_cluster_merged_trace_validates_per_pid(model):
+    """The merged fleet trace keys rows on (pid, tid): each replica's
+    spans nest within its own process namespace and the whole trace
+    passes the schema validator."""
+    cfg, params = model
+    cluster, _ = _cluster_run(cfg, params, True)
+    trace = cluster.chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    pids = {e["pid"] for e in trace["traceEvents"]}
+    assert pids == {0, 1}
+    # per-pid process_name metadata is present for both replicas
+    meta = {
+        (e["pid"], e["args"]["name"]) for e in trace["traceEvents"]
+        if e.get("ph") == "M" and e.get("name") == "process_name"
+    }
+    assert meta == {(0, "llm42-replica-0"), (1, "llm42-replica-1")}
+
+
 # ----------------------------------------------------------------------
 # determinism audit log
 # ----------------------------------------------------------------------
